@@ -1,0 +1,163 @@
+"""Paper reproduction tables — one function per paper table/figure.
+
+All numbers come from the timeline simulator (core.timeline) driven by
+the paper's own setup: GoogleNet (batch 64) and ResNet-50 (batch 32)
+layer profiles on K80-class compute and the measured 10GbE α–β all-reduce
+model (paper §V-A).  This is the same methodology as the paper's §V-C
+simulation, so the table to validate against is Fig. 9 (64-node) and the
+8-node speedups of Figs. 6–7.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.cnn_profiles import cnn_layer_costs, total_params
+from repro.core.cost_model import K80_CALIBRATED
+from repro.core import (
+    NVIDIA_K80,
+    evaluate,
+    evaluate_schedule,
+    mg_wfbp_schedule,
+    paper_cluster_model,
+    synceasgd_schedule,
+    wfbp_schedule,
+)
+from repro.core.schedule import dp_optimal_schedule
+
+
+def _bench(which: str, batch: int, n: int) -> dict:
+    costs = cnn_layer_costs(which, batch)
+    ar = paper_cluster_model(n)
+    L = len(costs)
+
+    wf = evaluate([(l, l) for l in range(1, L + 1)], costs, ar, K80_CALIBRATED)
+    se = evaluate([(1, L)], costs, ar, K80_CALIBRATED)
+    # SyncEASGD does not overlap: its single message starts after backward
+    # finishes, which the single-group schedule reproduces exactly.
+    mg = mg_wfbp_schedule(costs, ar, K80_CALIBRATED)
+    dp = dp_optimal_schedule(costs, ar, K80_CALIBRATED)
+    return {
+        "n": n,
+        "wfbp": wf,
+        "synceasgd": se,
+        "mg_wfbp": mg.result,
+        "dp_optimal": dp.result,
+        "mg_groups": len(mg.groups),
+    }
+
+
+def table_fig5a_gradient_distribution() -> list[str]:
+    """Fig. 5(a): layer-wise gradient-size distribution of the two CNNs."""
+    rows = ["table=fig5a_gradient_distribution"]
+    for which in ("googlenet", "resnet50"):
+        costs = cnn_layer_costs(which, 1)
+        sizes = [c.params for c in costs]
+        rows.append(
+            f"{which},layers={len(sizes)},total_params={total_params(which) / 1e6:.2f}M,"
+            f"min={min(sizes)},median={sorted(sizes)[len(sizes) // 2]},max={max(sizes)}"
+        )
+    return rows
+
+
+def table_fig5b_allreduce_model() -> list[str]:
+    """Fig. 5(b): all-reduce time vs message size; startup intercepts must
+    match the paper's measured 90.52/271.56/633.64 µs at N=2/4/8."""
+    rows = ["table=fig5b_allreduce_model"]
+    paper_measured = {2: 90.52e-6, 4: 271.56e-6, 8: 633.64e-6}
+    for n, meas in paper_measured.items():
+        ar = paper_cluster_model(n)
+        rows.append(
+            f"N={n},a_model={ar.a * 1e6:.2f}us,a_paper={meas * 1e6:.2f}us,"
+            f"rel_err={abs(ar.a - meas) / meas:.3f},"
+            f"T(200KB)={ar(200e3) * 1e3:.3f}ms,T(400KB)={ar(400e3) * 1e3:.3f}ms"
+        )
+    return rows
+
+
+def table_fig6_7_8node_speedups() -> list[str]:
+    """Figs. 6–7: 2/4/8-node speedups (weak scaling vs 1 worker)."""
+    rows = ["table=fig6_7_8node_speedups"]
+    for which, batch in (("googlenet", 64), ("resnet50", 32)):
+        for n in (2, 4, 8):
+            r = _bench(which, batch, n)
+            wf, se, mg = r["wfbp"], r["synceasgd"], r["mg_wfbp"]
+            rows.append(
+                f"{which},N={n},"
+                f"S_wfbp={wf.speedup(n):.2f},S_synceasgd={se.speedup(n):.2f},"
+                f"S_mgwfbp={mg.speedup(n):.2f},"
+                f"mg_vs_wfbp={wf.t_iter / mg.t_iter:.3f}x,"
+                f"mg_vs_se={se.t_iter / mg.t_iter:.3f}x"
+            )
+    return rows
+
+
+def table_fig8_comm_breakdown() -> list[str]:
+    """Fig. 8: computation vs non-overlapped communication at 8 nodes."""
+    rows = ["table=fig8_comm_breakdown"]
+    for which, batch in (("googlenet", 64), ("resnet50", 32)):
+        r = _bench(which, batch, 8)
+        for name in ("wfbp", "synceasgd", "mg_wfbp"):
+            res = r[name]
+            rows.append(
+                f"{which},{name},comp_ms={(res.t_f + res.t_b) * 1e3:.2f},"
+                f"exposed_comm_ms={res.t_comm_exposed * 1e3:.2f},"
+                f"r={res.comm_ratio:.3f}"
+            )
+    return rows
+
+
+def table_fig9_64node_simulation() -> list[str]:
+    """Fig. 9: 4..64-node simulated speedups; the paper's headline:
+    GoogleNet 64-node MG-WFBP beats WFBP by >1.7x and SyncEASGD by >1.3x;
+    ResNet-50 near-linear for MG-WFBP with ~55% efficiency baselines."""
+    rows = ["table=fig9_64node_simulation"]
+    for which, batch in (("googlenet", 64), ("resnet50", 32)):
+        for n in (4, 8, 16, 32, 64):
+            r = _bench(which, batch, n)
+            wf, se, mg, dp = r["wfbp"], r["synceasgd"], r["mg_wfbp"], r["dp_optimal"]
+            rows.append(
+                f"{which},N={n},S_wfbp={wf.speedup(n):.2f},"
+                f"S_synceasgd={se.speedup(n):.2f},S_mgwfbp={mg.speedup(n):.2f},"
+                f"S_dp_optimal={dp.speedup(n):.2f},"
+                f"mg_vs_wfbp={wf.t_iter / mg.t_iter:.3f}x,"
+                f"mg_vs_se={se.t_iter / mg.t_iter:.3f}x,"
+                f"dp_vs_mg={mg.t_iter / dp.t_iter:.4f}x"
+            )
+    return rows
+
+
+def table_lm_schedules_v5e() -> list[str]:
+    """Beyond-paper: MG-WFBP schedules for the assigned LM archs on the
+    production v5e mesh (pod-axis DP all-reduce, multi-pod 2x16x16)."""
+    rows = ["table=lm_schedules_v5e"]
+    from repro.configs import ARCH_NAMES, get_config
+    from repro.core import TPU_V5E, tpu_psum_model
+    from repro.core.trainer import build_schedule, lm_unit_costs
+    from repro.launch.specs import param_specs
+
+    ar = tpu_psum_model({"pod": 2, "data": 16})  # DP axes of the 2-pod mesh
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        shapes = param_specs(cfg)
+        costs = lm_unit_costs(cfg, shapes, tokens_per_device=8192, model_shards=16)
+        for method in ("wfbp", "synceasgd", "mg_wfbp", "dp_optimal"):
+            s = build_schedule(method, costs, ar)
+            rows.append(
+                f"{arch},{method},groups={len(s.groups)},"
+                f"t_iter_ms={s.result.t_iter * 1e3:.3f},"
+                f"exposed_ms={s.result.t_comm_exposed * 1e3:.3f}"
+            )
+    return rows
+
+
+ALL_TABLES = [
+    table_fig5a_gradient_distribution,
+    table_fig5b_allreduce_model,
+    table_fig6_7_8node_speedups,
+    table_fig8_comm_breakdown,
+    table_fig9_64node_simulation,
+    table_lm_schedules_v5e,
+]

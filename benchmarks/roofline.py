@@ -1,0 +1,83 @@
+"""Roofline report generator: reads dry-run JSON records and emits the
+EXPERIMENTS.md §Roofline table (markdown) plus per-cell one-line analyses.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun"
+
+MOVE_HINTS = {
+    ("memory", "train"): "fuse attention score chain (Pallas flash on TPU) and raise q_chunk — HLO per-op bytes over-count unfused elementwise chains",
+    ("memory", "prefill"): "sequence-shard q-chunks over the idle model axis; score buffers in bf16",
+    ("memory", "decode"): "decode is cache-read bound by nature; shrink KV via window/ring buffers or quantized cache",
+    ("collective", "train"): "MG-WFBP bucket schedule on the DP axis + bf16 wire dtype; overlap weight gathers with compute",
+    ("collective", "prefill"): "recurrent-state archs: batch the state exchanges; gather K/V once per layer not per chunk",
+    ("collective", "decode"): "stop FSDP-gathering weights per token: shard serving params over 'model' only (or EP)",
+    ("compute", "train"): "reduce remat recompute (dots-saveable policy); shard idle mesh axes into the batch",
+    ("compute", "prefill"): "use the model axis: TP heads or sequence-sharded chunks",
+    ("compute", "decode"): "decode flops are trivial; compute never binds here",
+}
+
+
+def load(mesh: str) -> list[dict]:
+    out = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def emit(mesh: str, md: bool) -> None:
+    recs = load(mesh)
+    kind_of = {"train_4k": "train", "prefill_32k": "prefill",
+               "decode_32k": "decode", "long_500k": "decode"}
+    if md:
+        print(f"| arch | shape | mem GiB | compute s | memory s | collective s | dominant | useful | fraction |")
+        print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        t = r.get("totals")
+        if not t:
+            print(f"| {r['arch']} | {r['shape']} | {r['memory']['peak_per_device_gib']} "
+                  f"| - | - | - | (multi-pod compile proof) | - | - |" if md else
+                  f"{r['arch']},{r['shape']},mem={r['memory']['peak_per_device_gib']}")
+            continue
+        line = (
+            f"| {r['arch']} | {r['shape']} | {r['memory']['peak_per_device_gib']:.2f} "
+            f"| {t['compute_term_s']:.4f} | {t['memory_term_s']:.4f} "
+            f"| {t['collective_term_s']:.4f} | {t['dominant']} "
+            f"| {t['useful_flops_ratio']:.3f} | {t['roofline_fraction']:.4f} |"
+            if md else
+            f"{r['arch']},{r['shape']},{t['compute_term_s']:.4f},{t['memory_term_s']:.4f},"
+            f"{t['collective_term_s']:.4f},{t['dominant']},{t['roofline_fraction']:.4f}"
+        )
+        print(line)
+    if md:
+        print()
+        print("**What would move the dominant term (per family):**")
+        seen = set()
+        for r in recs:
+            t = r.get("totals")
+            if not t:
+                continue
+            key = (t["dominant"], kind_of[r["shape"]])
+            if key in seen:
+                continue
+            seen.add(key)
+            print(f"- *{key[0]} × {key[1]}*: {MOVE_HINTS.get(key, 'n/a')}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16"])
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    emit(args.mesh, args.md)
+
+
+if __name__ == "__main__":
+    main()

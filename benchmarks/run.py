@@ -1,0 +1,57 @@
+"""Benchmark harness entry point: one function per paper table/figure plus
+the roofline summary assembled from dry-run records.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract:
+each table reports its wall time and emits its rows beneath it.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def roofline_summary() -> list[str]:
+    """Per-(arch x shape x mesh) roofline terms from the dry-run records."""
+    rows = ["table=roofline_summary"]
+    results = pathlib.Path(__file__).parent / "results" / "dryrun"
+    if not results.exists():
+        rows.append("no dry-run records yet; run python -m repro.launch.dryrun --all")
+        return rows
+    for f in sorted(results.glob("*.json")):
+        rec = json.loads(f.read_text())
+        t = rec.get("totals")
+        mem = rec["memory"]["peak_per_device_gib"]
+        if not t:
+            rows.append(f"{rec['arch']},{rec['shape']},{rec['mesh']},mem_gib={mem},segments=skipped")
+            continue
+        rows.append(
+            f"{rec['arch']},{rec['shape']},{rec['mesh']},mem_gib={mem},"
+            f"compute_s={t['compute_term_s']:.4f},memory_s={t['memory_term_s']:.4f},"
+            f"collective_s={t['collective_term_s']:.4f},dominant={t['dominant']},"
+            f"useful_ratio={t['useful_flops_ratio']:.3f},"
+            f"roofline_fraction={t['roofline_fraction']:.4f}"
+        )
+    return rows
+
+
+def main() -> None:
+    from benchmarks.paper_tables import ALL_TABLES
+
+    tables = list(ALL_TABLES) + [roofline_summary]
+    for fn in tables:
+        t0 = time.perf_counter()
+        rows = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        print(f"{fn.__name__},{dt_us:.0f},rows={len(rows) - 1}")
+        for r in rows:
+            print("  " + r)
+        print()
+
+
+if __name__ == "__main__":
+    main()

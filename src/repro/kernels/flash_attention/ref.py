@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash attention kernel: dense masked softmax
+attention with GQA, causal, sliding-window and softcap options."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, Hq, hd)
+    k: jax.Array,  # (B, Sk, Hkv, hd)
+    v: jax.Array,  # (B, Sk, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qf, kf) * hd**-0.5
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    # rows that are fully masked (can happen with window) produce NaN; zero them
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, vf)
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .kernel import rglru_pallas
+from .ops import rglru
+from .ref import rglru_ref
+
+__all__ = ["rglru", "rglru_pallas", "rglru_ref"]

@@ -1,0 +1,31 @@
+"""Public op for the RG-LRU recurrence: Pallas on TPU, associative_scan
+fallback otherwise (see models/rglru.py for the full Griffin block)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_pallas
+from .ref import rglru_ref
+
+
+def rglru(
+    a, g, h0=None, *, use_pallas: bool | None = None, interpret: bool = False
+):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return rglru_pallas(a, g, h0, interpret=interpret)
+
+    af, gf = a.astype(jnp.float32), g.astype(jnp.float32)
+    if h0 is not None:
+        gf = gf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, gf), axis=1)
+    return h, h[:, -1]

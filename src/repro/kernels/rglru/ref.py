@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the RG-LRU recurrence kernel: sequential scan of
+
+    h_t = a_t ⊙ h_{t-1} + g_t
+
+(the gates/decays a_t and pre-gated inputs g_t are computed by the caller;
+see models/rglru.py for the full block)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(
+    a: jax.Array,  # (B, T, W) decay in (0, 1]
+    g: jax.Array,  # (B, T, W) gated input
+    h0: jax.Array | None = None,  # (B, W)
+) -> tuple[jax.Array, jax.Array]:
+    B, T, W = a.shape
+    af, gf = a.astype(jnp.float32), g.astype(jnp.float32)
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, xs):
+        a_t, g_t = xs
+        h = a_t * h + g_t
+        return h, h
+
+    h_final, hs = jax.lax.scan(step, h, (af.transpose(1, 0, 2), gf.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), h_final

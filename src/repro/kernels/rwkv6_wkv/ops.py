@@ -1,0 +1,20 @@
+"""Public op for the WKV6 recurrence: Pallas on TPU, chunked jnp otherwise."""
+
+from __future__ import annotations
+
+import jax
+
+from ...models.rwkv6 import wkv_chunked
+from .kernel import wkv_pallas
+from .ref import wkv_ref
+
+
+def wkv(
+    r, k, v, w, u, s0=None, *, chunk: int = 128,
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return wkv_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+    return wkv_chunked(r, k, v, w, u, s0, chunk=chunk)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the WKV6 kernel: the *sequential* recurrence, the
+ground truth both the chunked jnp path (models/rwkv6.py) and the Pallas
+kernel must match.
+
+    out_t = r_t · S + (r_t · (u ⊙ k_t)) v_t
+    S    <- diag(w_t) · S + k_tᵀ v_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(
+    r: jax.Array,  # (B, T, H, K)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0, 1)
+    u: jax.Array,  # (H, K)
+    s0: jax.Array | None = None,  # (B, H, K, K)
+) -> tuple[jax.Array, jax.Array]:
+    B, T, H, K = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs  # (B, H, K)
+        inter = jnp.einsum("bhk,bhkv->bhv", r_t, S)
+        cur = jnp.einsum("bhk,bhk->bh", r_t, u[None] * k_t)[..., None] * v_t
+        out = inter + cur
+        S = S * w_t[..., None] + jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        return S, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    S, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3), S

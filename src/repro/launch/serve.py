@@ -1,0 +1,78 @@
+"""Serving launcher: batched prefill + decode loop over request batches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \\
+        --batch 4 --prompt-len 32 --tokens 16
+
+Production notes: on a pod the same prefill/decode steps lower with the
+serve shardings of launch/dryrun.py (KV sequence-sharded over 'model',
+decode-EP MoE).  Continuous batching (per-row positions / eviction) sits
+above `make_decode_step`; this launcher runs the simple batch-synchronous
+variant the benchmark shapes use.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_NAMES, get_config, get_reduced
+from ..launch.steps import make_decode_step, make_prefill_step
+from ..models.transformer import init_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_seq = args.prompt_len + args.tokens
+
+    prefill = jax.jit(make_prefill_step(cfg, None, max_seq=max_seq))
+    decode = jax.jit(make_decode_step(cfg, None))
+
+    key = jax.random.PRNGKey(1)
+    if cfg.input_mode == "embeds":
+        batch = {"embeds": jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32) * 0.02}
+    else:
+        batch = {"tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab)}
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len}: {time.time() - t0:.2f}s")
+
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        pos = args.prompt_len + i
+        if cfg.input_mode == "embeds":
+            step_in = {"embeds": params["embed"][tok[:, 0]][:, None].astype(jnp.float32)}
+        else:
+            step_in = {"tokens": tok}
+        logits, caches = decode(params, caches, step_in, jnp.asarray(pos, jnp.int32))
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / args.temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None]
+    dt = time.time() - t0
+    print(f"[serve] decode {args.tokens} x {args.batch}: {dt:.2f}s "
+          f"({args.tokens * args.batch / max(dt, 1e-9):.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Step builders: train_step (loss + grad + optimizer), prefill, decode.
+
+These are the functions the dry-run lowers and the trainer/server jit —
+one definition for both, parameterized by ArchConfig + ShardingRules.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward, init_caches, loss_fn
+from ..models.common import ArchConfig
+from ..optim import clip_by_global_norm
+from ..optim.optimizers import Optimizer
+from ..parallel.context import activation_sharding, from_rules
+from ..parallel.sharding import ShardingRules, act_constraint, logits_constraint
+
+Pytree = Any
+
+
+def _ctx(rules, batch: int, prefer: str | None = None):
+    if rules is None:
+        return activation_sharding(None)
+    if prefer is None:
+        # EP archs reserve the model axis for experts; the dense parts
+        # (attention) then need TP on that axis to stay parallel.
+        prefer = "tp" if getattr(rules, "reserve_model", False) else "fsdp"
+    return activation_sharding(from_rules(rules, batch, prefer=prefer))
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    rules: ShardingRules,
+    optimizer: Optimizer,
+    *,
+    lr: float = 3e-4,
+    grad_clip: float = 1.0,
+    n_microbatches: int = 1,
+    segments: tuple[tuple[int, int], ...] | None = None,
+    batch_size: int | None = None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def one_loss(params, batch):
+        b = batch.get("tokens", batch.get("embeds"))
+        micro_b = b.shape[0]  # per-microbatch rows — what the constraints shard
+        with _ctx(rules, micro_b):
+            return loss_fn(
+                params,
+                batch,
+                cfg,
+                segments=segments,
+                act_sharding_constraint=act_constraint(cfg, rules, micro_b)
+                if rules is not None
+                else None,
+                logits_sharding_constraint=logits_constraint(cfg, rules, micro_b)
+                if rules is not None
+                else None,
+            )
+
+    grad_fn = jax.value_and_grad(one_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches, x.shape[0] // n_microbatches) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(acc_step, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss_sum / n_microbatches
+            metrics = {}
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        out_metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rules: ShardingRules | None, max_seq: int):
+    """prefill(params, batch) -> (last_logits, caches)."""
+
+    def prefill(params, batch):
+        b = batch.get("tokens", batch.get("embeds"))
+        prefer = "tp" if (rules is not None and rules.reserve_model) else "seq_tp"
+        with _ctx(rules, b.shape[0], prefer=prefer):
+            caches = init_caches(cfg, batch=b.shape[0], max_seq=max_seq)
+            logits, caches, _ = forward(
+                params,
+                cfg,
+                tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                caches=caches,
+                act_sharding_constraint=act_constraint(cfg, rules, b.shape[0])
+                if rules is not None
+                else None,
+            )
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, rules: ShardingRules | None):
+    """decode(params, caches, batch, pos) -> (logits, caches).
+
+    ``batch`` holds one token per sequence: tokens (B, 1) or embeds
+    (B, 1, D); ``pos`` is the scalar absolute position (same across the
+    batch — continuous batching with per-row positions is a serving-engine
+    feature layered above this step).
+    """
+
+    def decode(params, caches, batch, pos):
+        b = batch.get("tokens", batch.get("embeds"))
+        with _ctx(rules, b.shape[0], prefer="fsdp"):  # caches carry the TP
+            logits, caches, _ = forward(
+                params,
+                cfg,
+                tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                caches=caches,
+                q_offset=pos,
+            )
+        return logits[:, 0], caches
+
+    return decode

@@ -1,0 +1,25 @@
+"""Model definitions: decoder LMs over heterogeneous block patterns
+(dense / local+global / MoE / RWKV6 / RG-LRU hybrid) with the
+bucket-segmented layer scan used by the MG-WFBP sync engine."""
+
+from .common import ArchConfig, Attention, MoE, Recurrent, param_count
+from .transformer import (
+    describe_params,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+)
+
+__all__ = [
+    "ArchConfig",
+    "Attention",
+    "MoE",
+    "Recurrent",
+    "param_count",
+    "describe_params",
+    "forward",
+    "init_caches",
+    "init_params",
+    "loss_fn",
+]

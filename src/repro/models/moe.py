@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style *grouped*
+capacity dispatch [arXiv:2006.16668].
+
+Tokens are laid out as (G groups, T/G tokens); each group routes its own
+tokens into per-group expert buffers with capacity C = (T/G)·k·cf/E, so
+the dispatch one-hot is (G, T/G, E, C) — linear in total tokens for a
+fixed group size.  The launcher sets G to the number of token shards:
+
+  * every group is then shard-local (no cross-shard reductions in the
+    dispatch einsums), and
+  * with experts sharded over 'model' (EP — dbrx: 16 experts on the
+    16-way axis) the (G@batch, E@model) buffer resharding lowers to the
+    classic MoE all-to-all; without EP (mixtral: 8 experts don't divide
+    16) expert weights are FSDP-gathered per layer instead.
+
+G=1 for smoke tests / single device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.context import constrain
+from .common import ArchConfig, MoE, truncated_normal
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, moe.n_experts
+    ks = jax.random.split(key, 4)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    return {
+        "router": truncated_normal(ks[0], (d, e), jnp.float32, std_in),
+        "w_gate": truncated_normal(ks[1], (e, d, f), cfg.param_dtype, std_in),
+        "w_up": truncated_normal(ks[2], (e, d, f), cfg.param_dtype, std_in),
+        "w_down": truncated_normal(ks[3], (e, f, d), cfg.param_dtype, std_out),
+    }
+
+
+def _capacity(tokens_per_group: int, moe: MoE) -> int:
+    c = int(tokens_per_group * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(4, min(tokens_per_group, (c + 3) // 4 * 4))
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = cfg.moe_groups if T % cfg.moe_groups == 0 else 1
+    tg = T // G
+    C = _capacity(tg, moe)
+    E = moe.n_experts
+
+    # decode-EP: at tiny token counts, gathering the data-dim shards of the
+    # expert tables per step is the cost (GB/token); instead replicate the
+    # few tokens and shard the weight-CONTRACTION dims over the data axes —
+    # every resulting psum is activation-sized (KB at decode shapes).
+    decode_ep = T <= 4096 and E >= 2
+    if decode_ep:
+        xt = constrain(x.reshape(G, tg, D), {2: "data"})
+    else:
+        xt = constrain(x.reshape(G, tg, D), {0: "batch"})
+    logits = xt.astype(jnp.float32) @ p["router"]  # (G, tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, moe.top_k)  # (G, tg, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # position of each (token, k) choice within its expert's capacity
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (G, tg, k, E)
+    flat = onehot.reshape(G, tg * moe.top_k, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, tg, moe.top_k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)  # (G, tg, k)
+    keep = pos < C
+
+    disp = (
+        jax.nn.one_hot(gate_idx, E, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=x.dtype)[..., None, :-1]
+    )  # (G, tg, k, E, C)
+    combine = jnp.sum(disp * gate_vals[..., None, None].astype(x.dtype), axis=2)
+    disp = jnp.sum(disp, axis=2)  # (G, tg, E, C)
+
+    # dispatch -> (G, E, C, D); EP reshards G@batch -> E@model (all-to-all)
+    if decode_ep:
+        xe = constrain(jnp.einsum("gtec,gtd->gecd", disp, xt), {1: "expert", 3: "data"})
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+        h = constrain(
+            h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"]), {1: "expert", 3: "data"}
+        )
+        ye = constrain(jnp.einsum("gecf,efd->gecd", h, p["w_down"]), {1: "expert"})
+    else:
+        xe = constrain(jnp.einsum("gtec,gtd->gecd", disp, xt), {0: "batch", 1: "expert"})
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+        h = constrain(
+            h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"]), {0: "batch", 1: "expert"}
+        )
+        ye = constrain(jnp.einsum("gecf,efd->gecd", h, p["w_down"]), {0: "batch", 1: "expert"})
+    out = jnp.einsum("gecd,gtec->gtd", ye, combine)
+    out = constrain(out, {0: "batch"}).reshape(B, S, D)
+
+    # load-balance aux (Switch/GShard)
+    frac = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return out, aux

@@ -1,0 +1,114 @@
+"""Griffin / RecurrentGemma recurrent block: temporal conv + RG-LRU
+[arXiv:2402.19427].
+
+RG-LRU (real-gated linear recurrent unit), diagonal recurrence:
+
+    r_t = σ(x_t W_a + b_a)            recurrence gate
+    i_t = σ(x_t W_x + b_x)            input gate
+    a_t = exp(-c · softplus(Λ) ⊙ r_t) with c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Being diagonal and linear in h, the sequence dimension parallelizes with
+``jax.lax.associative_scan`` (training/prefill); decode threads the state
+directly.  The Pallas kernel (kernels/rglru/) implements the chunked
+VMEM-resident variant of the same recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.context import constrain
+from .common import ArchConfig, truncated_normal
+
+RGLRU_C = 8.0
+
+
+def init_rglru_block(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv_width
+    ks = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    std = d ** -0.5
+    # Λ init so that a^(1/r) spans ~(0.9, 0.999) as in the paper
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / RGLRU_C))
+    return {
+        "w_main": truncated_normal(ks[0], (d, w), pd, std),
+        "w_gate": truncated_normal(ks[1], (d, w), pd, std),
+        "conv_w": truncated_normal(ks[2], (cw, w), pd, cw ** -0.5),
+        "conv_b": jnp.zeros((w,), pd),
+        "wa": truncated_normal(ks[3], (w, w), pd, w ** -0.5),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": truncated_normal(ks[4], (w, w), pd, w ** -0.5),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_out": truncated_normal(ks[5], (w, d), pd, w ** -0.5),
+    }
+
+
+def causal_conv1d(
+    x: jax.Array,  # (B, T, W)
+    w: jax.Array,  # (cw, W) depthwise
+    b: jax.Array,
+    state: jax.Array | None = None,  # (B, cw-1, W) trailing inputs
+) -> tuple[jax.Array, jax.Array]:
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw)) + b
+    return out.astype(x.dtype), xp[:, -(cw - 1) :]
+
+
+def rglru_scan(
+    x: jax.Array,  # (B, T, W) conv output
+    p: dict,
+    h0: jax.Array | None = None,  # (B, W)
+) -> tuple[jax.Array, jax.Array]:
+    """Apply the RG-LRU over time via associative scan.  fp32 internally."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r  # (B,T,W), <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    if h0 is not None:
+        # fold the initial state in as a virtual step-0 contribution:
+        # h_1 = a_1 h_0 + sqrt(1-a_1²) i_1 x_1
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(
+    p: dict,
+    x: jax.Array,  # (B, T, D) — already normed by the caller
+    cfg: ArchConfig,
+    state: dict | None = None,  # {'conv': (B,cw-1,W), 'h': (B,W)}
+) -> tuple[jax.Array, dict]:
+    gate = constrain(jax.nn.gelu(x @ p["w_gate"], approximate=True), {0: "batch", 2: "model"})
+    main = constrain(x @ p["w_main"], {0: "batch", 2: "model"})
+    conv_state = None if state is None else state["conv"]
+    h0 = None if state is None else state["h"]
+    main, new_conv = causal_conv1d(main, p["conv_w"], p["conv_b"], conv_state)
+    rec, new_h = rglru_scan(main, p, h0)
+    out = (rec * gate) @ p["w_out"]
+    return constrain(out, {0: "batch"}), {"conv": new_conv, "h": new_h}
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int) -> dict:
+    w = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv_width
+    return {
+        "conv": jnp.zeros((batch, cw - 1, w), cfg.param_dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,225 @@
+"""RWKV6 "Finch" block: token-shift time-mix with data-dependent decay WKV
+recurrence, plus squared-ReLU channel-mix [arXiv:2404.05892].
+
+The WKV recurrence per head (state S ∈ R^{hd×hd}):
+
+    out_t = r_t · S  +  (r_t · (u ⊙ k_t)) v_t
+    S    <- diag(w_t) · S + k_tᵀ v_t
+
+with per-channel, per-step decay w_t = exp(-exp(base + lora(x_t))).
+
+Training uses the *chunked* parallel form (flash-linear-attention style):
+within a chunk of C steps decay products are materialized and the
+intra-chunk interaction is a C×C masked matmul; the inter-chunk state is
+carried by a scan over chunks.  This is exact (same numerics up to fp
+reassociation) and is also the algorithm the Pallas TPU kernel implements
+with the state held in VMEM (see kernels/rwkv6_wkv/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.context import constrain
+from .common import ArchConfig, truncated_normal
+
+LORA_MIX = 32  # low-rank size of the 5-way interpolation lora
+LORA_DECAY = 64  # low-rank size of the decay lora
+
+
+def init_rwkv6_block(key, cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.recurrent.head_dim
+    n_heads = d // hd
+    ks = jax.random.split(key, 12)
+    std = d ** -0.5
+    pd = cfg.param_dtype
+    return {
+        "ln1": {"scale": jnp.ones((d,), pd), "bias": jnp.zeros((d,), pd)},
+        "ln2": {"scale": jnp.ones((d,), pd), "bias": jnp.zeros((d,), pd)},
+        "tm": {
+            "mu_x": jnp.zeros((d,), pd),
+            "mu_rkvwg": jnp.zeros((5, d), pd),
+            "lora_a": truncated_normal(ks[0], (d, 5 * LORA_MIX), pd, std),
+            "lora_b": truncated_normal(ks[1], (5, LORA_MIX, d), pd, LORA_MIX ** -0.5),
+            "w_r": truncated_normal(ks[2], (d, d), pd, std),
+            "w_k": truncated_normal(ks[3], (d, d), pd, std),
+            "w_v": truncated_normal(ks[4], (d, d), pd, std),
+            "w_g": truncated_normal(ks[5], (d, d), pd, std),
+            "w_o": truncated_normal(ks[6], (d, d), pd, std),
+            "decay_base": jnp.full((d,), -1.0, jnp.float32),
+            "decay_a": truncated_normal(ks[7], (d, LORA_DECAY), pd, std),
+            "decay_b": truncated_normal(ks[8], (LORA_DECAY, d), pd, LORA_DECAY ** -0.5),
+            "u": jnp.zeros((n_heads, hd), jnp.float32),  # per-head bonus
+            "gn_scale": jnp.ones((d,), pd),
+        },
+        "cm": {
+            "mu_k": jnp.zeros((d,), pd),
+            "mu_r": jnp.zeros((d,), pd),
+            "w_k": truncated_normal(ks[9], (d, f), pd, std),
+            "w_v": truncated_normal(ks[10], (f, d), pd, f ** -0.5),
+            "w_r": truncated_normal(ks[11], (d, d), pd, std),
+        },
+    }
+
+
+def _layernorm(p, x):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Return the previous token's features (first position uses ``prev`` or 0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None] if prev.ndim == 2 else prev
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(
+    r: jax.Array,  # (B, T, H, K)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # (B, T, H, K) decay in (0, 1), fp32
+    u: jax.Array,  # (H, K) current-token bonus
+    s0: jax.Array | None = None,  # (B, H, K, K) initial state
+    chunk: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked-parallel WKV6.  Returns (out (B,T,H,K) fp32, final state)."""
+    B, T, H, K = r.shape
+    chunk = min(chunk, T)
+    T_orig = T
+    if T % chunk:
+        # pad to a chunk multiple: padded steps use decay 1 and zero k/v, so
+        # the state passes through unchanged and padded outputs are dropped.
+        pad = chunk - T % chunk
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        T = T + pad
+    n_chunks = T // chunk
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w.astype(jnp.float32)
+
+    def reshape_c(a):
+        return a.reshape(B, n_chunks, chunk, H, K).transpose(1, 0, 3, 2, 4)  # (N,B,H,C,K)
+
+    rc, kc, vc, wc = map(reshape_c, (rf, kf, vf, wf))
+    logw = jnp.log(jnp.maximum(wc, 1e-30))  # (N,B,H,C,K)
+    clw = jnp.cumsum(logw, axis=-2)  # inclusive cumulative log-decay
+
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(S, xs):
+        rc_, kc_, vc_, clw_, logw_ = xs  # (B,H,C,K)
+        W_prev = jnp.exp(clw_ - logw_)  # prod decay up to t-1 (W_{i-1})
+        W_inc = jnp.exp(clw_)  # inclusive W_i
+        W_end = W_inc[..., -1:, :]  # (B,H,1,K) full-chunk decay
+        r_t = rc_ * W_prev  # r̃
+        k_t = kc_ / jnp.maximum(W_inc, 1e-30)  # k̃
+        # inter-chunk: r̃ @ S
+        inter = jnp.einsum("bhck,bhkv->bhcv", r_t, S)
+        # intra-chunk: strictly-lower-triangular (j < i)
+        A = jnp.einsum("bhck,bhdk->bhcd", r_t, k_t)
+        mask = jnp.tril(jnp.ones((A.shape[-2], A.shape[-1]), bool), k=-1)
+        intra = jnp.einsum("bhcd,bhdv->bhcv", jnp.where(mask, A, 0.0), vc_)
+        # current-token bonus
+        diag = jnp.einsum("bhck,bhck->bhc", rc_, u[None, :, None, :] * kc_)
+        cur = diag[..., None] * vc_
+        out = inter + intra + cur  # (B,H,C,V)
+        # state update
+        kw = k_t * W_end  # k̃_j * W_C
+        S_new = S * W_end.squeeze(-2)[..., :, None] + jnp.einsum("bhck,bhcv->bhkv", kw, vc_)
+        return S_new, out
+
+    S_final, outs = jax.lax.scan(step, s0, (rc, kc, vc, clw, logw))
+    # outs: (N, B, H, C, K) -> (B, T, H, K)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, K)
+    return out[:, :T_orig], S_final
+
+
+def rwkv6_time_mix(
+    p: dict,
+    x: jax.Array,  # (B, T, D)
+    cfg: ArchConfig,
+    state: dict | None = None,  # {'shift': (B,D), 'wkv': (B,H,K,K)}
+) -> tuple[jax.Array, dict]:
+    B, T, D = x.shape
+    hd = cfg.recurrent.head_dim
+    H = D // hd
+    prev = _token_shift(x, None if state is None else state["shift"])
+    xx = prev - x
+    xxx = x + xx * p["mu_x"]
+    m = jnp.einsum(
+        "btkl,kld->btkd",
+        jnp.tanh(xxx @ p["lora_a"]).astype(jnp.float32).reshape(B, T, 5, LORA_MIX),
+        p["lora_b"].astype(jnp.float32),
+    )  # (B,T,5,D)
+    mix = x[:, :, None, :] + xx[:, :, None, :] * (p["mu_rkvwg"].astype(x.dtype) + m.astype(x.dtype))
+    x_r, x_k, x_v, x_w, x_g = (mix[:, :, i] for i in range(5))
+
+    r = constrain((x_r @ p["w_r"]).reshape(B, T, H, hd), {0: "batch", 2: "model"})
+    k = constrain((x_k @ p["w_k"]).reshape(B, T, H, hd), {0: "batch", 2: "model"})
+    v = constrain((x_v @ p["w_v"]).reshape(B, T, H, hd), {0: "batch", 2: "model"})
+    g = constrain(jax.nn.silu(x_g @ p["w_g"]), {0: "batch"})
+
+    ww = jnp.tanh(x_w @ p["decay_a"]).astype(jnp.float32) @ p["decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["decay_base"] + ww)).reshape(B, T, H, hd)  # (0,1)
+
+    s0 = None if state is None else state["wkv"]
+    out, s_final = wkv_chunked(r, k, v, w, p["u"], s0, chunk=cfg.rec_chunk)
+
+    # per-head group norm
+    out = out.reshape(B, T, H, hd)
+    mu = jnp.mean(out, -1, keepdims=True)
+    var = jnp.var(out, -1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(B, T, D) * p["gn_scale"].astype(jnp.float32)
+    out = (out.astype(x.dtype) * g) @ p["w_o"]
+    new_state = {"shift": x[:, -1], "wkv": s_final}
+    return out, new_state
+
+
+def rwkv6_channel_mix(
+    p: dict, x: jax.Array, state: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    prev = _token_shift(x, state)
+    xx = prev - x
+    x_k = x + xx * p["mu_k"]
+    x_r = x + xx * p["mu_r"]
+    kk = constrain(jnp.square(jax.nn.relu(x_k @ p["w_k"])), {0: "batch", 2: "model"})
+    out = jax.nn.sigmoid(x_r @ p["w_r"]) * (kk @ p["w_v"])
+    return constrain(out, {0: "batch"}), x[:, -1]
+
+
+def rwkv6_block(
+    p: dict, x: jax.Array, cfg: ArchConfig, state: dict | None = None
+) -> tuple[jax.Array, dict]:
+    """One full RWKV6 layer: time-mix + channel-mix with pre-LN residuals."""
+    st_tm = None if state is None else state["tm"]
+    st_cm = None if state is None else state["cm"]
+    h, new_tm = rwkv6_time_mix(p["tm"], _layernorm(p["ln1"], x), cfg, st_tm)
+    x = x + h
+    h, new_cm = rwkv6_channel_mix(p["cm"], _layernorm(p["ln2"], x), st_cm)
+    x = x + h
+    return x, {"tm": new_tm, "cm": new_cm}
+
+
+def init_rwkv6_state(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    hd = cfg.recurrent.head_dim
+    H = d // hd
+    return {
+        "tm": {
+            "shift": jnp.zeros((batch, d), cfg.param_dtype),
+            "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        },
+        "cm": jnp.zeros((batch, d), cfg.param_dtype),
+    }

@@ -1,0 +1,19 @@
+from .optimizers import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    sgd_init,
+    sgd_update,
+    make_optimizer,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "sgd_init",
+    "sgd_update",
+    "make_optimizer",
+]

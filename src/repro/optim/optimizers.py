@@ -1,0 +1,132 @@
+"""Optimizers: SGD(+momentum) — the paper's optimizer — and AdamW for the
+LM examples.  Pure-functional; state pytrees mirror the parameter tree so
+every sharding rule applies unchanged (optimizer state is automatically
+FSDP/ZeRO-sharded alongside its parameter)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Pytree  # momentum / first moment ('' tree for plain SGD)
+    v: Pytree  # second moment (AdamW only; empty tree otherwise)
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (paper Eq. 1/2)
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params: Pytree, momentum: float = 0.0) -> OptState:
+    m = (
+        jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        if momentum
+        else jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+    )
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params))
+
+
+def sgd_update(
+    grads: Pytree,
+    state: OptState,
+    params: Pytree,
+    lr: float | jax.Array,
+    momentum: float = 0.0,
+) -> tuple[Pytree, OptState]:
+    if momentum:
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state.m, grads
+        )
+        upd = new_m
+    else:
+        new_m = state.m
+        upd = grads
+    new_params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - lr * u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        upd,
+    )
+    return new_params, OptState(step=state.step + 1, m=new_m, v=state.v)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Pytree) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads: Pytree,
+    state: OptState,
+    params: Pytree,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[Pytree, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.m, grads)
+    new_v = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.v, grads
+    )
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        step_val = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_val).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, OptState(step=step, m=new_m, v=new_v)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], OptState]
+    update: Callable[..., tuple[Pytree, OptState]]
+    name: str
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        momentum = kw.get("momentum", 0.0)
+        return Optimizer(
+            init=lambda p: sgd_init(p, momentum),
+            update=lambda g, s, p, lr: sgd_update(g, s, p, lr, momentum),
+            name="sgd",
+        )
+    if name == "adamw":
+        return Optimizer(
+            init=adamw_init,
+            update=lambda g, s, p, lr: adamw_update(g, s, p, lr, **kw),
+            name="adamw",
+        )
+    raise ValueError(name)

@@ -1,0 +1,123 @@
+"""Trace-time activation-sharding context.
+
+Model code is sharding-agnostic; the launcher activates a context and
+layers call ``constrain(x, {axis: role})`` at the tensor sites that matter
+(projections, hidden states, dispatch buffers).  Roles:
+
+  'batch'  — shard over the data axes (skipped when not divisible, e.g.
+             the batch-1 long_500k decode, or inside a shard_map where the
+             data axes are manual and must not appear in constraints)
+  'model'  — shard over the model axis, bound only under prefer='tp'
+             (Megatron TP: MLP hidden, heads — a hillclimb lever)
+  'expert' — shard over the model axis regardless of prefer (EP: expert
+             dim of MoE dispatch buffers follows the static expert-weight
+             sharding)
+
+Without an active context every constrain() is the identity, so tests and
+single-device smoke runs never see mesh axes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ActSharding:
+    batch_axes: tuple[str, ...] | None  # None inside shard_map manual DP
+    model_axis: str | None
+    data_size: int
+    model_size: int
+    # raw data axes of the mesh (for 'data' contraction-dim roles —
+    # decode-EP shards weight-contraction dims instead of gathering)
+    data_axes: tuple[str, ...] | None = None
+    raw_data_size: int = 1
+    # 'fsdp': only batch roles bind; weights are gathered per use and all
+    #         activation traffic stays zero (best when tokens/device >> 1).
+    # 'tp':   'model' roles also bind (Megatron-style hidden/head sharding;
+    #         a hillclimb lever for small-token regimes).
+    prefer: str = "fsdp"
+
+
+_CTX: contextvars.ContextVar[ActSharding | None] = contextvars.ContextVar(
+    "act_sharding", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(ctx: ActSharding | None):
+    token = _CTX.set(ctx)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current() -> ActSharding | None:
+    return _CTX.get()
+
+
+def tp_active() -> bool:
+    ctx = _CTX.get()
+    return ctx is not None and ctx.prefer == "tp" and ctx.model_axis is not None
+
+
+def tp_size() -> int:
+    ctx = _CTX.get()
+    return ctx.model_size if ctx is not None else 1
+
+
+def constrain(x: jax.Array, roles: dict[int, str]) -> jax.Array:
+    """Apply a with_sharding_constraint built from axis roles (see module
+    docstring); identity when no context is active or nothing divides."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec: list = [None] * x.ndim
+    used = False
+    for ax, role in roles.items():
+        dim = x.shape[ax]
+        if role == "batch" and ctx.batch_axes and dim % ctx.data_size == 0:
+            spec[ax] = ctx.batch_axes
+            used = True
+        elif (
+            role == "model"
+            and ctx.prefer in ("tp", "seq_tp")
+            and ctx.model_axis
+            and dim % ctx.model_size == 0
+        ):
+            spec[ax] = ctx.model_axis
+            used = True
+        elif role == "expert" and ctx.model_axis and dim % ctx.model_size == 0:
+            spec[ax] = ctx.model_axis
+            used = True
+        elif role == "data" and ctx.data_axes and dim % ctx.raw_data_size == 0:
+            spec[ax] = ctx.data_axes
+            used = True
+    if not used:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def from_rules(rules, batch: int, prefer: str = "fsdp") -> ActSharding:
+    """Build the context from ShardingRules for a given global batch."""
+    ba = rules.batch_axes(batch)
+    size = 1
+    if ba:
+        for a in ba:
+            size *= rules.mesh_shape[a]
+    model_ax = rules.model_axis if (not ba or rules.model_axis not in ba) else None
+    return ActSharding(
+        batch_axes=ba,
+        model_axis=model_ax,
+        data_size=size if ba else rules.data_size,
+        model_size=rules.model_size,
+        prefer=prefer,
+        data_axes=rules.data_axes,
+        raw_data_size=rules.data_size,
+    )

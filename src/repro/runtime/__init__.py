@@ -1,0 +1,11 @@
+from .fault_tolerance import RunState, StragglerMonitor, resilient_loop
+from .compression import ErrorFeedbackState, compressed_psum_rs_ag, ef_init
+
+__all__ = [
+    "RunState",
+    "StragglerMonitor",
+    "resilient_loop",
+    "ErrorFeedbackState",
+    "compressed_psum_rs_ag",
+    "ef_init",
+]

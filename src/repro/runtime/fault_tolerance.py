@@ -1,0 +1,134 @@
+"""Fault tolerance: restart loop, straggler mitigation, elasticity hooks.
+
+On a real multi-pod deployment each of these hooks binds to the cluster
+manager (GKE/Borg preemption signals, ICI health counters).  The logic —
+what to do when — lives here and is deterministic and unit-tested; the
+signal sources are injectable callables so the tests (and this CPU
+container) simulate failures exactly.
+
+* ``resilient_loop`` — run train steps; on failure restore the latest
+  complete checkpoint and continue.  Tolerates the checkpointed step
+  being mid-write (atomic rename guarantees a complete older one).
+* ``StragglerMonitor`` — deadline-based detection over per-step
+  durations: a step slower than ``factor`` x rolling median flags a
+  straggler; after ``patience`` consecutive flags it requests remediation
+  (re-shard / hot-spare swap at the cluster layer).  This implements the
+  synchronous-SGD-side mitigation MG-WFBP needs: merged buckets make
+  all-reduces fewer and larger, so one slow participant stalls the whole
+  step — detection must be cheap and fast.
+* elasticity — on restart with a different device count the MG-WFBP
+  schedule is recomputed (checkpoint layout is schedule-agnostic; see
+  checkpoint.restore_rebucketed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+from ..checkpoint import AsyncCheckpointer, latest_step, restore
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class RunState:
+    step: int
+    params: Pytree
+    opt_state: Pytree
+    restarts: int = 0
+
+
+class StragglerMonitor:
+    """Deadline-based straggler detection on per-step wall times."""
+
+    def __init__(self, factor: float = 2.0, patience: int = 3, window: int = 32):
+        self.factor = factor
+        self.patience = patience
+        self.window = window
+        self.durations: list[float] = []
+        self.consecutive_slow = 0
+        self.remediations = 0
+
+    def observe(self, duration_s: float) -> bool:
+        """Record one step; returns True when remediation should trigger."""
+        if len(self.durations) >= 8:
+            med = statistics.median(self.durations[-self.window :])
+            if duration_s > self.factor * med:
+                self.consecutive_slow += 1
+            else:
+                self.consecutive_slow = 0
+        self.durations.append(duration_s)
+        if self.consecutive_slow >= self.patience:
+            self.consecutive_slow = 0
+            self.remediations += 1
+            return True
+        return False
+
+
+def resilient_loop(
+    *,
+    num_steps: int,
+    init_state: Callable[[], RunState],
+    train_step: Callable[[RunState, int], RunState],
+    checkpoint_dir: str,
+    checkpoint_every: int = 50,
+    max_restarts: int = 5,
+    fault_injector: Callable[[int], None] | None = None,
+    straggler: StragglerMonitor | None = None,
+    on_straggler: Callable[[RunState], RunState] | None = None,
+) -> RunState:
+    """Checkpoint/restart training loop.
+
+    ``fault_injector(step)`` may raise to simulate a node failure;
+    the loop restores the latest complete checkpoint and resumes.  The
+    data pipeline needs no state file — batches are pure functions of the
+    step (data/pipeline.py), so restored step ⇒ restored stream.
+    """
+    ckpt = AsyncCheckpointer(checkpoint_dir)
+    state = init_state()
+    restarts = 0
+
+    while state.step < num_steps:
+        try:
+            t0 = time.monotonic()
+            if fault_injector is not None:
+                fault_injector(state.step)
+            state = train_step(state, state.step)
+            state.step += 1
+            dt = time.monotonic() - t0
+            if straggler is not None and straggler.observe(dt):
+                if on_straggler is not None:
+                    state = on_straggler(state)
+            if state.step % checkpoint_every == 0:
+                ckpt.save(
+                    state.step,
+                    {"params": state.params, "opt_state": state.opt_state},
+                    extra={"restarts": restarts},
+                )
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            ckpt.wait()
+            step = latest_step(checkpoint_dir)
+            if step is None:
+                state = init_state()
+                state.restarts = restarts
+                continue
+            fresh = init_state()
+            tree, extra = restore(
+                checkpoint_dir, step,
+                {"params": fresh.params, "opt_state": fresh.opt_state},
+            )
+            state = RunState(
+                step=step,
+                params=tree["params"],
+                opt_state=tree["opt_state"],
+                restarts=restarts,
+            )
+    ckpt.wait()
+    state.restarts = restarts
+    return state

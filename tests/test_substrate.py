@@ -1,0 +1,243 @@
+"""Substrate tests: data pipeline, checkpointing, fault tolerance,
+optimizers, comm models."""
+
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.core import (
+    ALGORITHMS,
+    AllReduceModel,
+    TpuInterconnect,
+    paper_cluster_model,
+    tpu_psum_model,
+)
+from repro.data import DataConfig, make_stream
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, sgd_init, sgd_update
+from repro.runtime import RunState, StragglerMonitor, resilient_loop
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestData:
+    def cfg(self, **kw):
+        return DataConfig(vocab=128, seq_len=32, global_batch=8, **kw)
+
+    def test_deterministic_per_step(self):
+        s = make_stream(self.cfg())
+        a, b = s.batch_at(7), s.batch_at(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = s.batch_at(8)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_targets_shifted(self):
+        s = make_stream(self.cfg())
+        b = s.batch_at(0)
+        assert b["tokens"].shape == (8, 32) and b["targets"].shape == (8, 32)
+
+    def test_host_sharding_partitions_batch(self):
+        full = make_stream(self.cfg(), host_rank=0, host_count=1)
+        h0 = make_stream(self.cfg(), host_rank=0, host_count=2)
+        h1 = make_stream(self.cfg(), host_rank=1, host_count=2)
+        assert h0.batch_at(3)["tokens"].shape == (4, 32)
+        # different ranks draw different rows
+        assert not np.array_equal(h0.batch_at(3)["tokens"], h1.batch_at(3)["tokens"])
+
+    def test_resume_mid_stream(self):
+        s = make_stream(self.cfg())
+        it = s.iterate(start_step=5)
+        first = next(it)
+        np.testing.assert_array_equal(first["tokens"], s.batch_at(5)["tokens"])
+
+    def test_embeds_mode(self):
+        s = make_stream(self.cfg(input_mode="embeds", d_model=16))
+        b = s.batch_at(0)
+        assert b["embeds"].shape == (8, 32, 16)
+
+    @settings(max_examples=20, deadline=None)
+    @given(step=st.integers(0, 10_000), rank=st.integers(0, 3))
+    def test_pure_function_of_step(self, step, rank):
+        s1 = make_stream(self.cfg(), host_rank=rank, host_count=4)
+        s2 = make_stream(self.cfg(), host_rank=rank, host_count=4)
+        np.testing.assert_array_equal(
+            s1.batch_at(step)["tokens"], s2.batch_at(step)["tokens"]
+        )
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpoint:
+    def tree(self, k=0):
+        return {
+            "a": jnp.arange(12.0).reshape(3, 4) + k,
+            "nested": {"b": jnp.ones((5,), jnp.int32) * k},
+        }
+
+    def test_roundtrip(self, tmp_path):
+        save(tmp_path, 3, self.tree(1), extra={"note": "x"})
+        out, extra = restore(tmp_path, 3, self.tree(0))
+        np.testing.assert_array_equal(out["a"], self.tree(1)["a"])
+        assert extra == {"note": "x"}
+
+    def test_latest_step_ignores_tmp(self, tmp_path):
+        save(tmp_path, 1, self.tree())
+        save(tmp_path, 2, self.tree())
+        (tmp_path / "step_00000099.tmp").mkdir()
+        assert latest_step(tmp_path) == 2
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save(tmp_path, 1, self.tree())
+        bad = {"a": jnp.zeros((2, 2)), "nested": {"b": jnp.zeros((5,), jnp.int32)}}
+        with pytest.raises(ValueError):
+            restore(tmp_path, 1, bad)
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = AsyncCheckpointer(tmp_path)
+        ck.save(10, self.tree(2))
+        ck.save(20, self.tree(3))  # waits for the first
+        ck.wait()
+        assert latest_step(tmp_path) == 20
+        out, _ = restore(tmp_path, 10, self.tree(0))
+        np.testing.assert_array_equal(out["a"], self.tree(2)["a"])
+
+    def test_overwrite_same_step(self, tmp_path):
+        save(tmp_path, 5, self.tree(1))
+        save(tmp_path, 5, self.tree(9))
+        out, _ = restore(tmp_path, 5, self.tree(0))
+        np.testing.assert_array_equal(out["a"], self.tree(9)["a"])
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+class TestFaultTolerance:
+    def test_restart_resumes_from_checkpoint(self, tmp_path):
+        calls = {"crashes": 0}
+
+        def init_state():
+            return RunState(step=0, params={"w": jnp.zeros(())}, opt_state={})
+
+        def fault(step):
+            if step == 12 and calls["crashes"] == 0:
+                calls["crashes"] += 1
+                raise RuntimeError("node died")
+
+        def train(state, step):
+            state.params = {"w": state.params["w"] + 1.0}
+            return state
+
+        final = resilient_loop(
+            num_steps=20, init_state=init_state, train_step=train,
+            checkpoint_dir=str(tmp_path), checkpoint_every=5,
+            fault_injector=fault,
+        )
+        assert final.step == 20
+        assert final.restarts == 1
+        # params replayed deterministically: w == 20 (5 steps lost, redone)
+        assert float(final.params["w"]) == 20.0
+
+    def test_max_restarts_exceeded(self, tmp_path):
+        def init_state():
+            return RunState(step=0, params={}, opt_state={})
+
+        def fault(step):
+            raise RuntimeError("always dies")
+
+        with pytest.raises(RuntimeError):
+            resilient_loop(
+                num_steps=5, init_state=init_state,
+                train_step=lambda s, i: s,
+                checkpoint_dir=str(tmp_path), max_restarts=2,
+                fault_injector=fault,
+            )
+
+    def test_straggler_monitor(self):
+        mon = StragglerMonitor(factor=2.0, patience=3)
+        for _ in range(16):
+            assert not mon.observe(1.0)
+        assert not mon.observe(5.0)
+        assert not mon.observe(5.0)
+        assert mon.observe(5.0)  # third consecutive -> remediate
+        assert mon.remediations == 1
+        # counter resets after remediation
+        assert not mon.observe(5.0)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+class TestOptim:
+    def test_sgd_momentum_matches_manual(self):
+        p = {"w": jnp.asarray([1.0, 2.0])}
+        g = {"w": jnp.asarray([0.5, -0.5])}
+        st_ = sgd_init(p, momentum=0.9)
+        p1, st1 = sgd_update(g, st_, p, lr=0.1, momentum=0.9)
+        np.testing.assert_allclose(np.asarray(p1["w"]), [1.0 - 0.05, 2.0 + 0.05])
+        p2, _ = sgd_update(g, st1, p1, lr=0.1, momentum=0.9)
+        # m2 = 0.9*0.5 + 0.5 = 0.95  =>  w2 = w1 -/+ 0.1*0.95
+        np.testing.assert_allclose(
+            np.asarray(p2["w"]), [0.95 - 0.095, 2.05 + 0.095], rtol=1e-6
+        )
+
+    def test_adamw_decreases_quadratic(self):
+        p = {"w": jnp.asarray([5.0, -3.0])}
+        st_ = adamw_init(p)
+        for _ in range(200):
+            g = {"w": 2 * p["w"]}
+            p, st_ = adamw_update(g, st_, p, lr=0.05, weight_decay=0.0)
+        assert float(jnp.max(jnp.abs(p["w"]))) < 0.5
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(10.0)
+        total = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(clipped)))
+        assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# comm models
+# ---------------------------------------------------------------------------
+
+
+class TestCommModel:
+    def test_merging_property_eq10(self):
+        for name, fn in ALGORITHMS.items():
+            m = fn(8, 45e-6, 1e-9, 1e-10)
+            assert m.merged_gain(1e6, 2e6) == pytest.approx(m.a)
+            assert m(1e6) + m(2e6) > m(3e6)
+
+    def test_paper_intercepts(self):
+        assert paper_cluster_model(8).a == pytest.approx(633.64e-6, rel=1e-3)
+
+    def test_tpu_hierarchical_model(self):
+        single = tpu_psum_model({"data": 16})
+        multi = tpu_psum_model({"pod": 2, "data": 16})
+        assert multi.a > single.a  # DCN startup adds
+        assert multi(1 << 20) > single(1 << 20)
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n=st.sampled_from([2, 4, 8, 16, 64]),
+        m1=st.integers(1, 10**8),
+        m2=st.integers(1, 10**8),
+    )
+    def test_merge_never_hurts_pure_comm(self, n, m1, m2):
+        ar = paper_cluster_model(n)
+        assert ar(m1 + m2) <= ar(m1) + ar(m2)
