@@ -16,7 +16,9 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro.configs import get_reduced
+from repro.planning import Plan
 from repro.core import tpu_psum_model
 from repro.core.trainer import MGWFBPEngine
 from repro.data import DataConfig, make_stream
@@ -66,7 +68,7 @@ def main():
 
     def do_step(state, step):
         batch = jax.tree.map(jnp.asarray, data.batch_at(step))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p, o, m = step16(state.params, state.opt_state, batch)
         return RunState(step=state.step, params=p, opt_state=o, restarts=state.restarts)
 
@@ -79,8 +81,15 @@ def main():
     print(f"phase 1 done: step={state.step} restarts={state.restarts} "
           f"(failure at 25 -> restored from step 20)")
 
+    # The plan is a serializable artifact: persist it beside the weights so
+    # a same-N restart reloads it instead of recomputing Algorithm 1.
+    plan_path = eng16.plan.save(CKPT + "/plan_n16.json")
+    reloaded = Plan.load(plan_path)
+    assert reloaded == eng16.plan
+    print(f"plan artifact round-tripped via {plan_path}")
+
     # phase 2: the cluster grew to "64 chips" — elastic restart:
-    # same checkpoint, new schedule from Algorithm 1 at the new N
+    # same checkpoint, new plan from the same policy at the new N
     eng64 = make_engine(cfg, shapes, 64)
     print("schedule @ N=64:", eng64.schedule.describe())
     assert eng64.schedule.groups != eng16.schedule.groups or True  # may differ
@@ -89,7 +98,7 @@ def main():
     tree, _ = restore(CKPT, ck, {"params": fresh.params, "opt_state": fresh.opt_state})
     step64 = eng64.make_train_step(opt, mesh, lr=1e-3)
     params, opt_state = tree["params"], tree["opt_state"]
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for s in range(ck, ck + 5):
             batch = jax.tree.map(jnp.asarray, data.batch_at(s))
             params, opt_state, m = step64(params, opt_state, batch)

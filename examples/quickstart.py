@@ -14,9 +14,10 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.configs.cnn_profiles import cnn_layer_costs
 from repro.core import paper_cluster_model, tpu_psum_model
 from repro.core.cost_model import K80_CALIBRATED, TPU_V5E
-from repro.core.schedule import dp_optimal_schedule
-from repro.core.trainer import build_schedule, lm_unit_costs
+from repro.core.trainer import lm_unit_costs
 from repro.launch.specs import param_specs
+from repro.planning import build_schedule
+
 
 
 def main():

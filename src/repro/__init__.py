@@ -1,0 +1,9 @@
+"""MG-WFBP reproduction: merged-gradient WFBP scheduling for distributed
+synchronous SGD, grown into a JAX training-and-serving system.
+
+Subpackages: ``planning`` (Plan artifact, policy registry, cost sources),
+``core`` (schedulers, timeline, sync engine), ``launch``, ``runtime``,
+``models``, ``kernels``, ``optim``, ``data``, ``checkpoint``, ``serving``.
+"""
+
+__version__ = "0.1.0"

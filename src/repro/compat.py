@@ -1,0 +1,107 @@
+"""Version shims for the jax APIs this repo uses.
+
+The codebase targets the modern jax surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``).  Older
+jaxlib builds (0.4.x, like the one baked into the CI container) expose
+the same functionality under ``jax.experimental.shard_map`` / the mesh
+context manager / ``jax.make_mesh`` without axis types.  Everything in
+the repo goes through this module so the delta lives in one place.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "make_mesh", "axis_size", "tpu_compiler_params"]
+
+
+def variadic_psum_is_single_op() -> bool:
+    """Whether ``psum`` over a tuple lowers to ONE variadic all-reduce op.
+
+    Modern jax/XLA (the versions that ship ``jax.shard_map``) fuse the
+    tuple into a single variadic op; 0.4.x emits one all-reduce per
+    operand and relies on the combiner pass.  Same feature boundary as
+    the shard_map API, so that attribute is the probe.
+    """
+    return hasattr(jax, "shard_map")
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (modern) / ``pltpu.TPUCompilerParams``
+    (0.4.x) — same fields, renamed class."""
+    import jax.experimental.pallas.tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def axis_size(axis_name: str):
+    """Size of a manual mesh axis from inside shard_map.
+
+    Modern jax: ``jax.lax.axis_size``.  Legacy: ``psum(1, axis)``, which
+    constant-folds to the same static integer.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: set[str] | None = None,
+    check_vma: bool = False,
+):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    ``axis_names``/``check_vma`` follow the modern signature; the legacy
+    path maps ``check_vma`` onto ``check_rep`` and treats every mesh axis
+    as manual (``axis_names`` ignored).  Partial-manual (``auto=``) on
+    0.4.x trips an XLA-CPU SpmdPartitioner abort on scanned bodies; for
+    this repo's usage fully-manual is numerically identical because the
+    non-DP axes carry no explicit collectives inside the body — they just
+    lose GSPMD sharding, i.e. replicate model-axis compute.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs: dict[str, Any] = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kwargs,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def set_mesh(mesh):
+    """Context manager selecting ``mesh`` as the ambient mesh.
+
+    Modern jax: ``jax.set_mesh``.  Legacy jax has no sharding-typed
+    ambient mesh; entering the ``Mesh`` object itself provides the
+    closest equivalent (and is a no-op for fully-explicit jit calls,
+    which is how every call site in this repo passes shardings).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext()
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with all axes Auto-typed when supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)

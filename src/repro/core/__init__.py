@@ -6,8 +6,10 @@ Public surface:
   timeline    — WFBP timeline evaluation (paper Eqs. 6–8, 19–21)
   schedule    — Algorithm 1 (MG-WFBP), WFBP/SyncEASGD/fixed-bucket baselines,
                 exhaustive exact optimum
-  bucketing   — param-pytree <-> schedule-bucket mapping
-  sync        — one variadic all-reduce per bucket inside shard_map
+  bucketing   — param-pytree <-> schedule-bucket mapping (leaf + stacked units)
+  sync        — the unified bucketed reducer: one all-reduce per schedule
+                group inside shard_map (see also repro.planning for the
+                Plan artifact / policy registry / cost sources)
   profiler    — HLO segment cost extraction + collective-traffic parser
 """
 
@@ -42,8 +44,15 @@ from .bucketing import (
     layer_buckets_for_scan,
     layout_for_stacked_lm,
     layout_from_params,
+    stacked_lm_layout,
 )
-from .sync import SyncConfig, count_expected_allreduces, make_gradient_sync
+from .schedule import dp_optimal_schedule
+from .sync import (
+    SyncConfig,
+    count_expected_allreduces,
+    make_gradient_sync,
+    wire_entries,
+)
 from .profiler import CollectiveStats, SegmentCost, parse_collectives, segment_cost
 
 __all__ = [
@@ -79,9 +88,12 @@ __all__ = [
     "layer_buckets_for_scan",
     "layout_for_stacked_lm",
     "layout_from_params",
+    "stacked_lm_layout",
+    "dp_optimal_schedule",
     "SyncConfig",
     "count_expected_allreduces",
     "make_gradient_sync",
+    "wire_entries",
     "CollectiveStats",
     "SegmentCost",
     "parse_collectives",

@@ -3,15 +3,26 @@
 The scheduler (``core.schedule``) works on the paper's flat layer list
 ``1..L``.  Real models are pytrees.  This module defines the bridge:
 
-  * a ``ParamLayout`` names every *communication unit* (leaf or stacked
-    layer-slice) in backward-availability order, with its gradient message
-    size — the ``p`` vector of the paper;
-  * ``bucketize`` groups the units according to a ``Schedule`` so the sync
-    engine can issue exactly one (variadic) all-reduce per group;
-  * stacked-layer models (scan over a leading L axis) re-bucket by slicing
-    the leading axis, which is also how checkpoints are converted when the
-    schedule changes between runs (elastic restarts — a different N gives a
-    different α–β model, hence a different optimal 𝕄).
+  * a ``ParamLayout`` names every *communication unit* in
+    backward-availability order, with its gradient message size — the
+    ``p`` vector of the paper.  Two unit kinds exist:
+
+      - ``leaf``    — the unit owns whole pytree leaves (its ``paths``);
+      - ``stacked`` — the unit is one index of a scan-stacked subtree:
+        ``paths`` name the stacked leaves and ``stack_index`` selects the
+        slice along their leading axis.  Contiguous stacked units in one
+        schedule group collapse into a single ``[a:b]`` slice on the wire.
+
+  * ``bucket_assignment`` groups the units according to a ``Schedule`` so
+    the sync engine can issue exactly one all-reduce per group;
+  * stacked-layer models re-bucket by slicing the leading axis, which is
+    also how checkpoints are converted when the schedule changes between
+    runs (elastic restarts — a different N gives a different α–β model,
+    hence a different optimal 𝕄).
+
+Paths are stored as plain ``str``/``int`` tuples (jax key objects are
+normalized away) so a ``ParamLayout`` serializes losslessly into the
+``planning.Plan`` JSON artifact.
 """
 
 from __future__ import annotations
@@ -25,6 +36,24 @@ import numpy as np
 from .cost_model import LayerCost
 from .schedule import Schedule
 
+LEAF = "leaf"
+STACKED = "stacked"
+
+
+def normalize_path(path: tuple[Any, ...]) -> tuple[Any, ...]:
+    """jax key-path entries -> plain str/int keys (JSON-serializable)."""
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "idx"):
+            out.append(p.idx)
+        elif hasattr(p, "name"):
+            out.append(p.name)
+        else:
+            out.append(p)
+    return tuple(out)
+
 
 @dataclasses.dataclass(frozen=True)
 class CommUnit:
@@ -35,7 +64,10 @@ class CommUnit:
     grad_bytes: int
     params: int
     # paths into the gradient pytree whose leaves belong to this unit
+    # (kind == 'stacked': the stacked leaves, sliced at stack_index)
     paths: tuple[tuple[Any, ...], ...]
+    kind: str = LEAF
+    stack_index: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +108,17 @@ class ParamLayout:
         return out
 
 
+def _subtree_paths(tree: Any, prefix: tuple[Any, ...]) -> list[tuple[tuple[Any, ...], Any]]:
+    """(full normalized path, leaf) pairs for every leaf under ``tree``."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(prefix + normalize_path(tuple(p)), leaf) for p, leaf in flat]
+
+
+def _leaf_size(leaf: Any) -> int:
+    shape = getattr(leaf, "shape", ())
+    return int(np.prod(shape)) if shape else 1
+
+
 def layout_from_params(
     params: Any,
     comm_dtype_bytes: int = 4,
@@ -92,21 +135,81 @@ def layout_from_params(
     named = []
     for path, leaf in leaves:
         name = jax.tree_util.keystr(path).strip("[].'\"").replace("']['", ".")
-        named.append((name, path, leaf))
+        named.append((name, normalize_path(tuple(path)), leaf))
     if order_key is not None:
         named.sort(key=lambda t: order_key(t[0]))
     units = []
     for i, (name, path, leaf) in enumerate(named):
-        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        size = _leaf_size(leaf)
         units.append(
             CommUnit(
                 name=name,
                 index=i + 1,
                 grad_bytes=max(1, size * comm_dtype_bytes // model_shards),
                 params=size,
-                paths=(tuple(path),),
+                paths=(path,),
             )
         )
+    return ParamLayout(units=tuple(units))
+
+
+def stacked_lm_layout(
+    param_shapes: Any,
+    n_stages: int,
+    comm_dtype_bytes: int = 4,
+    model_shards: int = 1,
+) -> ParamLayout:
+    """ParamLayout for the stacked-scan LM param pytree.
+
+    ``param_shapes`` is the model's parameter (shape) pytree with top-level
+    subtrees ``embed``, ``stages`` (leaves stacked on a leading axis of
+    length ``n_stages``), ``final_norm``, optional ``tail`` and optional
+    ``head`` (absent when embeddings are tied).
+
+    Units in paper order (gradient of unit 1 lands last):
+      unit 1             = embed                       (leaf kind)
+      units 2..n+1       = scan stages                 (stacked kind)
+      unit n+2 (if tail) = tail stage                  (leaf kind)
+      last unit          = head + final_norm           (leaf kind)
+    """
+
+    def leaf_unit(name: str, idx: int, pairs: list[tuple[tuple[Any, ...], Any]]) -> CommUnit:
+        size = sum(_leaf_size(leaf) for _, leaf in pairs)
+        return CommUnit(
+            name=name,
+            index=idx,
+            grad_bytes=max(1, size * comm_dtype_bytes // model_shards),
+            params=size,
+            paths=tuple(p for p, _ in pairs),
+        )
+
+    units = [leaf_unit("embed", 1, _subtree_paths(param_shapes["embed"], ("embed",)))]
+
+    stage_pairs = _subtree_paths(param_shapes["stages"], ("stages",))
+    stage_params = sum(_leaf_size(leaf) for _, leaf in stage_pairs) // n_stages
+    stage_paths = tuple(p for p, _ in stage_pairs)
+    for i in range(n_stages):
+        units.append(
+            CommUnit(
+                name=f"stage_{i}",
+                index=i + 2,
+                grad_bytes=max(1, stage_params * comm_dtype_bytes // model_shards),
+                params=stage_params,
+                paths=stage_paths,
+                kind=STACKED,
+                stack_index=i,
+            )
+        )
+
+    idx = n_stages + 2
+    if "tail" in param_shapes:
+        units.append(leaf_unit("tail", idx, _subtree_paths(param_shapes["tail"], ("tail",))))
+        idx += 1
+
+    head_pairs = _subtree_paths(param_shapes["final_norm"], ("final_norm",))
+    if "head" in param_shapes:
+        head_pairs += _subtree_paths(param_shapes["head"], ("head",))
+    units.append(leaf_unit("head", idx, head_pairs))
     return ParamLayout(units=tuple(units))
 
 
@@ -118,10 +221,10 @@ def layout_for_stacked_lm(
     comm_dtype_bytes: int = 4,
     model_shards: int = 1,
 ) -> ParamLayout:
-    """ParamLayout for a stacked-scan LM: [embed, layer×L, head].
+    """Synthetic ParamLayout for a stacked-scan LM: [embed, layer×L, head].
 
-    Paper ordering: embed is layer 1 (gradient available last), the head is
-    layer L+2 (gradient available first).  Message sizes are per-DP-shard.
+    Cost-model-only variant (no real pytree behind it); see
+    ``stacked_lm_layout`` for the executable one.
     """
 
     def unit(name: str, idx: int, p: int) -> CommUnit:

@@ -4,25 +4,39 @@ The paper's Algorithm 2 runs a background communication thread that pops
 layer indices from a queue and calls ``SynchronizedAllReduce`` on merged
 buffers.  In JAX the same structure is expressed to the compiler instead:
 
-  * the train step runs inside ``jax.shard_map`` with the data-parallel
-    mesh axes **manual** and the model axes **auto** (GSPMD), so the DP
-    gradient reduction is written explicitly by us — one
-    ``jax.lax.psum(tuple_of_grads, axes)`` per schedule group;
-  * ``psum`` over a tuple lowers to a *single variadic all-reduce* HLO op —
-    the merged message of Definition 1 with **zero copies** (beyond-paper:
-    B-Caffe materialized a fused buffer);
+  * the train step runs inside ``shard_map`` with the data-parallel mesh
+    axes **manual** and the model axes **auto** (GSPMD), so the DP
+    gradient reduction is written explicitly by us — one all-reduce per
+    schedule group;
   * XLA's latency-hiding scheduler overlaps each group's all-reduce with
     the backward computation of earlier layers, because the groups are
     independent ops — structurally the same overlap WFBP gets from its
     background thread.
 
-Three strategies mirror the paper's compared systems:
+There is exactly ONE bucketed reducer, ``make_gradient_sync``, driven by
+a ``ParamLayout``'s communication units.  Both unit kinds flow through
+the same path: ``leaf`` units contribute whole pytree leaves, ``stacked``
+units contribute contiguous slices of scan-stacked leaves (a group
+spanning stages [a, b) ships ``leaf[a:b]``; XLA folds
+slice-of-assembled-grad back to the per-segment gradient value, so each
+group's all-reduce depends only on its own scan segment's backward).
+The WFBP / SyncEASGD / MG-WFBP distinction is *entirely* in the schedule
+a policy produced — there is no separate strategy switch (the old
+``SyncConfig.strategy`` is absorbed by ``planning.registry`` aliases).
 
-  ``per_tensor``  — WFBP:   one psum per communication unit
-  ``single``      — SyncEASGD: one variadic psum over everything
-  ``bucketed``    — MG-WFBP: one variadic psum per schedule group
+Two wire layouts:
 
-plus ``compressed`` wrappers (bf16 / int8 + error feedback) as the
+  ``concat``    — each group's encoded leaves are flattened into one
+                  buffer and reduced with a single ``psum``: the merged
+                  message of Definition 1, guaranteed one all-reduce HLO
+                  op per group on every jax/XLA version (one copy each
+                  way, like B-Caffe's fused buffer).
+  ``variadic``  — one ``psum`` over the tuple of leaves (zero-copy);
+                  newer XLA lowers this to a single variadic all-reduce,
+                  older versions emit one op per leaf and rely on the
+                  all-reduce combiner.
+
+plus ``compressed`` wrappers (bf16 + error feedback) as the
 communication-dtype option discussed in DESIGN.md.
 """
 
@@ -33,9 +47,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .bucketing import CommUnit, ParamLayout, bucket_assignment
-from .schedule import Schedule, synceasgd_schedule, wfbp_schedule
+from ..compat import axis_size, variadic_psum_is_single_op
+from .bucketing import LEAF, ParamLayout, bucket_assignment
+from .schedule import Schedule
 
 Pytree = Any
 
@@ -72,18 +88,51 @@ def _set(tree: Pytree, path: tuple[Any, ...], value: Any) -> Pytree:
 class SyncConfig:
     """How DP gradients are reduced.
 
-    strategy    : 'per_tensor' | 'single' | 'bucketed'
     comm_dtype  : dtype gradients are cast to on the wire (uniform per
-                  bucket — required for variadic all-reduce, and how real
+                  bucket — required for the merged buffer, and how real
                   systems ship grads anyway).
     average     : divide by the DP world size after summing.
-    compression : None | 'bf16' | 'int8' (int8 adds error-feedback state).
+    compression : None | 'bf16' (int8 adds error-feedback state and lives
+                  in ``runtime/compression.py``).
+    fuse        : 'concat' (one flat buffer per group, exactly one
+                  all-reduce op) | 'variadic' (tuple psum, zero-copy).
+
+    Which layers ride together is NOT configured here — that is the
+    schedule, produced by a ``planning.registry`` policy.
     """
 
-    strategy: str = "bucketed"
     comm_dtype: Any = jnp.float32
     average: bool = True
     compression: str | None = None
+    fuse: str = "concat"
+
+
+# One wire entry: ('leaf', path, None) or ('slice', path, (a, b)).
+WireEntry = tuple[str, tuple[Any, ...], tuple[int, int] | None]
+
+
+def wire_entries(layout: ParamLayout, schedule: Schedule) -> list[list[WireEntry]]:
+    """Per-group wire plan in backward issue order (layer-L group first).
+
+    Leaf units contribute one entry per leaf path; contiguous stacked
+    units collapse into one ``[a:b)`` slice entry per stacked leaf path.
+    """
+    groups: list[list[WireEntry]] = []
+    for units in reversed(bucket_assignment(layout, schedule)):
+        entries: list[WireEntry] = []
+        runs: dict[tuple, list[int]] = {}
+        for u in units:
+            if u.kind == LEAF:
+                entries.extend(("leaf", p, None) for p in u.paths)
+            else:
+                runs.setdefault(u.paths, []).append(u.stack_index)
+        for paths, idxs in runs.items():
+            a, b = min(idxs), max(idxs) + 1
+            if sorted(idxs) != list(range(a, b)):
+                raise ValueError(f"stacked units in one group must be contiguous: {idxs}")
+            entries.extend(("slice", p, (a, b)) for p in paths)
+        groups.append(entries)
+    return groups
 
 
 def make_gradient_sync(
@@ -94,36 +143,52 @@ def make_gradient_sync(
 ) -> Callable[[Pytree], Pytree]:
     """Build ``sync_fn(grads) -> reduced_grads`` for use inside shard_map.
 
-    One variadic ``psum`` is issued per schedule group; tests assert the
-    lowered HLO contains exactly ``len(schedule.groups)`` all-reduce ops.
+    One all-reduce is issued per schedule group (``fuse='concat'``);
+    ``count_expected_allreduces`` states the invariant and
+    ``tests/test_planning.py`` pins it against lowered HLO.
     """
-    if config.strategy == "per_tensor":
-        schedule = wfbp_schedule(layout.num_layers)
-    elif config.strategy == "single":
-        schedule = synceasgd_schedule(layout.num_layers)
-    buckets = bucket_assignment(layout, schedule)
+    if config.fuse not in ("concat", "variadic"):
+        raise ValueError(f"unknown fuse mode {config.fuse!r}")
+    group_entries = wire_entries(layout, schedule)
 
     def sync(grads: Pytree) -> Pytree:
         world = 1.0
         for ax in dp_axes:
-            world *= jax.lax.axis_size(ax)
+            world *= axis_size(ax)
         out = grads
         # Issue groups in backward order (layer-L group first), matching the
         # availability order the schedule was optimized for.
-        for units in reversed(buckets):
-            leaves, paths, orig_dtypes = [], [], []
-            for u in units:
-                for path in u.paths:
-                    g = _get(grads, path)
-                    paths.append(path)
-                    orig_dtypes.append(g.dtype)
-                    leaves.append(_encode(g, config))
-            reduced = jax.lax.psum(tuple(leaves), dp_axes)
-            for path, r, dt in zip(paths, reduced, orig_dtypes):
+        for entries in group_entries:
+            vals, metas = [], []
+            for kind, path, ab in entries:
+                g = _get(grads, path)
+                if kind == "slice":
+                    g = g[ab[0] : ab[1]]
+                metas.append((kind, path, ab, g.dtype, g.shape))
+                vals.append(_encode(g, config))
+            if config.fuse == "concat":
+                flat = (
+                    jnp.concatenate([v.reshape(-1) for v in vals])
+                    if len(vals) > 1
+                    else vals[0].reshape(-1)
+                )
+                red = jax.lax.psum(flat, dp_axes)
+                parts, off = [], 0
+                for _, _, _, _, shp in metas:
+                    n = int(np.prod(shp)) if shp else 1
+                    parts.append(red[off : off + n].reshape(shp))
+                    off += n
+            else:
+                parts = list(jax.lax.psum(tuple(vals), dp_axes))
+            for (kind, path, ab, dt, _), r in zip(metas, parts):
                 r = _decode(r, dt, config)
                 if config.average:
-                    r = (r / world).astype(dt)
-                out = _set(out, path, r)
+                    r = (r.astype(jnp.float32) / world).astype(dt)
+                if kind == "leaf":
+                    out = _set(out, path, r)
+                else:
+                    cur = _get(out, path)
+                    out = _set(out, path, cur.at[ab[0] : ab[1]].set(r.astype(cur.dtype)))
         return out
 
     return sync
@@ -144,110 +209,19 @@ def _decode(r: jax.Array, orig_dtype: Any, config: SyncConfig) -> jax.Array:
     return r.astype(orig_dtype)
 
 
-def count_expected_allreduces(schedule: Schedule, config: SyncConfig, num_units: int) -> int:
-    if config.strategy == "per_tensor":
-        return num_units
-    if config.strategy == "single":
-        return 1
-    return len(schedule.groups)
-
-
-# ---------------------------------------------------------------------------
-# Stacked-LM sync: schedule units = [embed, stage_1..stage_n, head]
-# ---------------------------------------------------------------------------
-
-
-def make_stacked_lm_sync(
+def count_expected_allreduces(
     schedule: Schedule,
-    n_stages: int,
-    dp_axes: tuple[str, ...],
     config: SyncConfig = SyncConfig(),
-    has_tail: bool = False,
-):
-    """Bucketed gradient sync for the stacked-layer LM param layout.
+    layout: ParamLayout | None = None,
+) -> int:
+    """Gradient all-reduce ops the sync lowers to.
 
-    Schedule units (paper layer numbering, gradient of unit 1 lands last):
-      unit 1            = embed (+ tied head)
-      units 2..n+1      = scan stages (stacked leaves, sliced per bucket)
-      unit n+2 (+tail)  = head + final_norm (+ tail stage)
-
-    One variadic psum per schedule group; a group spanning stages [a, b)
-    psums the *slices* of the stacked gradients — XLA folds
-    slice-of-assembled-grad back to the per-segment gradient value, so
-    each group's all-reduce depends only on its own scan segment's
-    backward (that is what the schedule's overlap model assumes).
+    'concat' fuses each group into one buffer — exactly one op per group
+    on every jax version.  'variadic' issues one psum per group: modern
+    XLA lowers that to a single variadic op per group too, while 0.4.x
+    emits one op per operand — the honest expectation there needs the
+    layout (wire-leaf count per group).
     """
-    L = schedule.num_layers
-    expected = n_stages + 2 + (1 if has_tail else 0)
-    if L != expected:
-        raise ValueError(f"schedule has {L} units, layout needs {expected}")
-
-    def sync(grads: Pytree) -> Pytree:
-        out = jax.tree.map(lambda g: g, grads)  # shallow copy
-        stages_out = dict(out["stages"]) if isinstance(out["stages"], dict) else out["stages"]
-
-        world = 1.0
-        for ax in dp_axes:
-            world *= jax.lax.axis_size(ax)
-
-        def finish(leaves, reduced):
-            outv = []
-            for (dtype, _), r in zip(leaves, reduced):
-                r = r.astype(jnp.float32) / world if config.average else r
-                outv.append(r.astype(dtype))
-            return outv
-
-        new_stage_slices: list[tuple[int, int, list]] = []
-        new_scalars: dict[str, Any] = {}
-
-        for lo, hi in reversed(schedule.groups):  # backward order
-            payload = []  # (orig_dtype, array) in fixed order
-            keys = []  # ('embed', path) | ('stage', (a,b), path) | ...
-            # tail unit index = n_stages + 2 (+ head at n_stages + 2 or +3)
-            for unit in range(hi, lo - 1, -1):
-                if unit == 1:
-                    for path, leaf in jax.tree_util.tree_flatten_with_path(grads["embed"])[0]:
-                        payload.append((leaf.dtype, _encode(leaf, config)))
-                        keys.append(("embed", tuple(path)))
-                elif 2 <= unit <= n_stages + 1:
-                    continue  # handled as a contiguous slice below
-                else:
-                    names = ["final_norm"] + (["head"] if "head" in grads else [])
-                    if has_tail and unit == n_stages + 2:
-                        names = ["tail"]
-                    for nm in names:
-                        for path, leaf in jax.tree_util.tree_flatten_with_path(grads[nm])[0]:
-                            payload.append((leaf.dtype, _encode(leaf, config)))
-                            keys.append((nm, tuple(path)))
-            a = max(lo - 2, 0)
-            b = min(hi - 1, n_stages)
-            if b > a:
-                for path, leaf in jax.tree_util.tree_flatten_with_path(grads["stages"])[0]:
-                    payload.append((leaf.dtype, _encode(leaf[a:b], config)))
-                    keys.append(("stages", (a, b), tuple(path)))
-
-            reduced = jax.lax.psum(tuple(arr for _, arr in payload), dp_axes)
-            reduced = finish(payload, reduced)
-            for key, r in zip(keys, reduced):
-                if key[0] == "stages":
-                    _, (a_, b_), path = key
-                    new_stage_slices.append((a_, b_, [(path, r)]))
-                else:
-                    new_scalars.setdefault(key[0], []).append((key[1], r))
-
-        # reassemble
-        for nm, items in new_scalars.items():
-            sub = grads[nm]
-            for path, r in items:
-                sub = _set(sub, path, r)
-            out[nm] = sub
-        stages = grads["stages"]
-        for a, b, items in new_stage_slices:
-            for path, r in items:
-                cur = _get(stages, path)
-                cur = cur.at[a:b].set(r.astype(cur.dtype))
-                stages = _set(stages, path, cur)
-        out["stages"] = stages
-        return out
-
-    return sync
+    if config.fuse == "concat" or layout is None or variadic_psum_is_single_op():
+        return len(schedule.groups)
+    return sum(len(entries) for entries in wire_entries(layout, schedule))

@@ -1,20 +1,25 @@
 """The MG-WFBP training engine (Tier 2): explicit, scheduled DP gradient
-communication inside ``jax.shard_map``.
+communication inside ``shard_map``.
 
 Pipeline (paper Algorithm 2, compiler-expressed):
 
-  1. profile  — per-unit gradient sizes + backward times from the arch
-                config (analytic Eq. 18 costs, or HLO-profiled segments);
-  2. schedule — Algorithm 1 (``mg_wfbp``), the exact DP (``dp_optimal``),
-                or the WFBP / SyncEASGD / fixed-bucket baselines;
-  3. execute  — the layer scan is segmented on the schedule's bucket
-                boundaries and gradients are reduced with one variadic
-                all-reduce per bucket (zero-copy merge), all inside
-                ``shard_map`` with the DP axes manual and the model axis
-                left to GSPMD.
+  1. cost     — per-unit gradient sizes + backward times from a
+                ``planning.CostSource`` (analytic Eq. 18 by default, or a
+                measured wall-clock / HLO-segment profile);
+  2. plan     — a ``planning.registry`` policy (Algorithm 1 ``mg_wfbp``,
+                the exact DP ``dp_optimal``, or the WFBP / SyncEASGD /
+                fixed-bucket baselines) turns the cost vector into a
+                frozen, JSON-serializable ``Plan``;
+  3. execute  — the layer scan is segmented on the plan's bucket
+                boundaries and gradients are reduced with one all-reduce
+                per bucket, all inside ``shard_map`` with the DP axes
+                manual and the model axis left to GSPMD.
 
-The schedule is recomputed whenever N changes (elastic restart) — it is
-a pure function of (arch, mesh, α–β model), never stored in checkpoints.
+The engine is re-plannable: ``replan_if_drifted`` (journal MG-WFBP's
+online re-planning) swaps in a successor plan built from measured costs,
+and elastic restarts rebuild the plan for the new N — plans are cheap
+pure functions of (arch, mesh, α–β model) and serialize to JSON so
+restarts and dry-runs can reuse them instead of recomputing.
 """
 
 from __future__ import annotations
@@ -26,22 +31,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import shard_map
 from ..models import loss_fn
 from ..models.common import ArchConfig
 from ..optim.optimizers import Optimizer
-from .bucketing import layer_buckets_for_scan
+from ..planning import AnalyticCosts, CostSource, build_plan, replan_if_drifted
+from ..planning import build_schedule as _registry_build_schedule
+from ..planning.plan import Plan
+from .bucketing import stacked_lm_layout
 from .comm_model import AllReduceModel
 from .cost_model import Hardware, LayerCost, TPU_V5E
-from .schedule import (
-    Schedule,
-    dp_optimal_schedule,
-    evaluate_schedule,
-    fixed_bucket_schedule,
-    mg_wfbp_schedule,
-    synceasgd_schedule,
-    wfbp_schedule,
-)
-from .sync import SyncConfig, make_stacked_lm_sync
+from .schedule import Schedule
+from .sync import SyncConfig, make_gradient_sync
 
 Pytree = Any
 
@@ -103,31 +104,38 @@ def build_schedule(
     hw: Hardware = TPU_V5E,
     bucket_bytes: int = 25 * 2**20,
 ) -> Schedule:
-    L = len(costs)
-    if method == "mg_wfbp":
-        return mg_wfbp_schedule(costs, ar_model, hw)
-    if method == "dp_optimal":
-        return dp_optimal_schedule(costs, ar_model, hw)
-    if method == "wfbp":
-        return evaluate_schedule(wfbp_schedule(L), costs, ar_model, hw)
-    if method == "synceasgd":
-        return evaluate_schedule(synceasgd_schedule(L), costs, ar_model, hw)
-    if method == "fixed":
-        return evaluate_schedule(
-            fixed_bucket_schedule(costs, bucket_bytes), costs, ar_model, hw
-        )
-    raise ValueError(method)
+    """Compatibility shim over the planning registry.
+
+    Scheduler selection lives in ``planning.registry`` — new code should
+    call ``planning.build_schedule(policy, ...)`` / ``get_policy`` directly.
+    """
+    return _registry_build_schedule(
+        method, costs, ar_model, hw=hw, bucket_bytes=bucket_bytes
+    )
 
 
 @dataclasses.dataclass
 class MGWFBPEngine:
-    """Schedule + segment + sync bundle for one (arch, mesh) pair."""
+    """Plan + sync bundle for one (arch, mesh) pair.
+
+    The schedule, scan segmentation, cost vector, and provenance all live
+    in the frozen ``plan``; the engine adds the executable pieces (the
+    bucketed sync closure and the shard_map train step).
+    """
 
     cfg: ArchConfig
-    schedule: Schedule
-    segments: tuple[tuple[int, int], ...]
+    plan: Plan
     sync: Any
     dp_axes: tuple[str, ...]
+    sync_config: SyncConfig = SyncConfig()
+
+    @property
+    def schedule(self) -> Schedule:
+        return self.plan.schedule
+
+    @property
+    def segments(self) -> tuple[tuple[int, int], ...]:
+        return self.plan.segments
 
     @classmethod
     def build(
@@ -136,41 +144,98 @@ class MGWFBPEngine:
         param_shapes: Pytree,
         *,
         dp_axes: tuple[str, ...],
-        ar_model: AllReduceModel,
-        tokens_per_device: int,
+        ar_model: AllReduceModel | None = None,
+        tokens_per_device: int | None = None,
         hw: Hardware = TPU_V5E,
-        method: str = "mg_wfbp",
+        policy: str | None = None,
+        method: str | None = None,  # legacy alias for ``policy``
         sync_config: SyncConfig = SyncConfig(),
         model_shards: int = 1,
+        plan: Plan | None = None,
+        cost_source: CostSource | None = None,
     ) -> "MGWFBPEngine":
-        costs = lm_unit_costs(
-            cfg, param_shapes, tokens_per_device,
-            hw=hw, model_shards=model_shards,
-            comm_dtype_bytes=jnp.dtype(sync_config.comm_dtype).itemsize
-            if sync_config.compression is None
-            else 2,
-        )
-        schedule = build_schedule(method, costs, ar_model, hw)
-        if method in ("wfbp",):
-            # WFBP communicates every unit separately -> every stage is its
-            # own scan segment (compile cost grows with L; that is the
-            # point of comparing against it).
-            segments = tuple((i, i + 1) for i in range(cfg.n_stages))
-        else:
-            segments = layer_buckets_for_scan(schedule, cfg.n_stages)
-        # NB: the stacked sync buckets purely by the schedule's groups —
-        # wfbp/synceasgd arrive here as all-singleton / single-group
-        # schedules, so no separate strategy switch is needed.
-        sync = make_stacked_lm_sync(
-            schedule,
-            cfg.n_stages,
-            dp_axes,
-            config=sync_config,
-            has_tail=bool(cfg.tail_pattern),
-        )
+        """Build from an existing ``plan``, or derive one from a cost
+        source + policy (the planning lifecycle's first three legs)."""
+        if plan is not None:
+            requested = policy or method
+            if requested is not None:
+                from ..planning import resolve_policy_name
+
+                if resolve_policy_name(requested) != plan.policy:
+                    raise ValueError(
+                        f"plan was built with policy {plan.policy!r}; drop the "
+                        f"policy argument to reuse it, or re-plan with {requested!r}"
+                    )
+        if plan is None:
+            if ar_model is None:
+                raise ValueError("either a plan or an ar_model is required")
+            comm_bytes = (
+                jnp.dtype(sync_config.comm_dtype).itemsize
+                if sync_config.compression is None
+                else 2
+            )
+            layout = stacked_lm_layout(
+                param_shapes, cfg.n_stages,
+                comm_dtype_bytes=comm_bytes, model_shards=model_shards,
+            )
+            if cost_source is None:
+                if tokens_per_device is None:
+                    raise ValueError("tokens_per_device is required for analytic costs")
+                cost_source = AnalyticCosts(
+                    costs=tuple(
+                        lm_unit_costs(
+                            cfg, param_shapes, tokens_per_device,
+                            hw=hw, model_shards=model_shards,
+                            comm_dtype_bytes=comm_bytes,
+                        )
+                    ),
+                    hw=hw,
+                )
+            plan = build_plan(
+                layout,
+                cost_source.layer_costs(),
+                ar_model,
+                policy=policy or method or "mg_wfbp",
+                hw=cost_source.hw,
+                n_scan_stages=cfg.n_stages,
+                cost_source=cost_source.name,
+                provenance={"arch": cfg.name},
+            )
+        if plan.n_scan_stages not in (None, cfg.n_stages):
+            raise ValueError(
+                f"plan was built for {plan.n_scan_stages} scan stages, "
+                f"arch {cfg.name} has {cfg.n_stages}"
+            )
+        sync = make_gradient_sync(plan.layout, plan.schedule, dp_axes, sync_config)
         return cls(
-            cfg=cfg, schedule=schedule, segments=segments, sync=sync, dp_axes=dp_axes
+            cfg=cfg, plan=plan, sync=sync, dp_axes=dp_axes, sync_config=sync_config
         )
+
+    def with_plan(self, plan: Plan) -> "MGWFBPEngine":
+        """Same engine, different plan (rebuilds the sync closure)."""
+        return MGWFBPEngine.build(
+            self.cfg, None, dp_axes=self.dp_axes,
+            sync_config=self.sync_config, plan=plan,
+        )
+
+    def replan(
+        self,
+        measured: CostSource,
+        threshold: float = 0.15,
+        policy: str | None = None,
+    ) -> tuple["MGWFBPEngine", bool]:
+        """Online re-planning hook: returns (engine, replanned).
+
+        When measured costs drift beyond ``threshold`` the policy reruns
+        and a new engine (new sync + segments) is returned; the caller
+        must rebuild its train step (the scan segmentation changed).
+        """
+        new_plan, changed = replan_if_drifted(
+            self.plan, measured, threshold=threshold, policy=policy
+        )
+        if not changed:
+            return self, False
+        return self.with_plan(new_plan), True
 
     def make_train_step(self, optimizer: Optimizer, mesh, *, lr: float = 3e-4):
         """Shard-map train step: manual DP axes, auto model axis."""
@@ -193,7 +258,7 @@ class MGWFBPEngine:
         else:
             batch_spec["tokens"] = P(self.dp_axes, None)
 
-        smapped = jax.shard_map(
+        smapped = shard_map(
             body,
             mesh=mesh,
             in_specs=(P(), P(), batch_spec),

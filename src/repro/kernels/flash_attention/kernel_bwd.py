@@ -22,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ...compat import tpu_compiler_params
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -194,7 +196,7 @@ def flash_attention_bwd(
         out_specs=pl.BlockSpec((None, block_q, hd), q_map_q),
         out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, hd), q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -230,7 +232,7 @@ def flash_attention_bwd(
             pltpu.VMEM((block_k, hd), jnp.float32),
             pltpu.VMEM((block_k, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -2,24 +2,36 @@
 fault-tolerant loop + async checkpointing, driven by --arch configs.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \\
-        --reduced --steps 100 --batch 8 --seq 256 --method mg_wfbp
+        --reduced --steps 100 --batch 8 --seq 256 --policy mg_wfbp
 
 On a real TPU slice the same entry point runs under `jax.distributed`
-(one process per host); this container runs it single-process.  The
-schedule method, comm dtype, checkpoint cadence and restart budget are
-flags; everything else comes from the arch config and the mesh.
+(one process per host); this container runs it single-process.
+
+Planning lifecycle wiring (journal MG-WFBP's online re-planning):
+
+  * the engine builds (or loads, ``--plan-in``) a frozen ``Plan``;
+  * every ``--replan-every`` steps the measured median step time
+    calibrates a ``MeasuredCosts`` vector and ``replan_if_drifted``
+    decides whether the policy reruns (threshold ``--replan-threshold``);
+    a re-plan rebuilds the train step (scan segmentation changed);
+  * fault-tolerant restarts re-enter planning through the
+    ``resilient_loop`` ``on_restart`` hook — same pipeline, current N;
+  * ``--plan-out`` serializes the final plan for elastic restarts,
+    dry-runs, and benchmarks to reuse.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import statistics
 import time
 
 import jax
 import jax.numpy as jnp
 
 from ..checkpoint import AsyncCheckpointer, latest_step, restore
+from ..compat import set_mesh
 from ..configs import ARCH_NAMES, get_config, get_reduced
 from ..core import tpu_psum_model
 from ..core.sync import SyncConfig
@@ -29,6 +41,7 @@ from ..launch.mesh import make_mesh
 from ..launch.specs import param_specs
 from ..models.transformer import init_params
 from ..optim import make_optimizer
+from ..planning import MeasuredCosts, Plan, available_policies
 from ..runtime import RunState, StragglerMonitor, resilient_loop
 
 
@@ -42,14 +55,24 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
-    ap.add_argument("--method", default="mg_wfbp",
-                    choices=["mg_wfbp", "dp_optimal", "wfbp", "synceasgd", "fixed"])
+    ap.add_argument("--policy", "--method", dest="policy", default=None,
+                    choices=list(available_policies()),
+                    help="scheduler policy (planning registry; default mg_wfbp). "
+                         "With --plan-in, only valid if it matches the plan's policy.")
     ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--virtual-dp", type=int, default=32,
                     help="DP size assumed by the α–β schedule model")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--max-restarts", type=int, default=5)
+    ap.add_argument("--plan-in", default=None,
+                    help="load a serialized Plan instead of planning")
+    ap.add_argument("--plan-out", default=None,
+                    help="write the final Plan JSON here")
+    ap.add_argument("--replan-every", type=int, default=25,
+                    help="steps between measured-profile drift checks (0 = off)")
+    ap.add_argument("--replan-threshold", type=float, default=0.25,
+                    help="relative per-unit backward-time drift that triggers a re-plan")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -62,20 +85,29 @@ def main() -> None:
         comm_dtype=jnp.bfloat16 if args.comm_dtype == "bf16" else jnp.float32,
         compression="bf16" if args.comm_dtype == "bf16" else None,
     )
-    eng = MGWFBPEngine.build(
-        cfg,
-        param_specs(cfg),
-        dp_axes=("data",),
-        ar_model=tpu_psum_model({"data": args.virtual_dp}),
-        tokens_per_device=args.batch * args.seq // n_dev,
-        method=args.method,
-        sync_config=sync_cfg,
-    )
-    print(f"[train] {eng.schedule.describe()}")
-    print(f"[train] scan segments: {eng.segments}")
+
+    def build_engine(plan: Plan | None = None) -> MGWFBPEngine:
+        return MGWFBPEngine.build(
+            cfg,
+            param_specs(cfg),
+            dp_axes=("data",),
+            ar_model=tpu_psum_model({"data": args.virtual_dp}),
+            tokens_per_device=args.batch * args.seq // n_dev,
+            # a loaded plan carries its own policy; an explicitly requested
+            # one is forwarded so the engine can reject a mismatch instead
+            # of silently losing it
+            policy=args.policy if plan is not None else (args.policy or "mg_wfbp"),
+            sync_config=sync_cfg,
+            plan=plan,
+        )
+
+    plan_in = Plan.load(args.plan_in) if args.plan_in else None
+    state_box = {"eng": build_engine(plan_in)}
+    print(f"[train] {state_box['eng'].plan.describe()}")
+    print(f"[train] scan segments: {state_box['eng'].segments}")
 
     opt = make_optimizer(args.optimizer)
-    step_fn = eng.make_train_step(opt, mesh, lr=args.lr)
+    state_box["step_fn"] = state_box["eng"].make_train_step(opt, mesh, lr=args.lr)
     data = make_stream(
         DataConfig(
             vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
@@ -83,19 +115,63 @@ def main() -> None:
         )
     )
     monitor = StragglerMonitor()
+    step_times: list[float] = []
 
     def init_state() -> RunState:
         params = init_params(jax.random.PRNGKey(0), cfg)
         return RunState(step=0, params=params, opt_state=opt.init(params))
 
+    def maybe_replan(step: int) -> None:
+        """Measured-profile drift check (journal MG-WFBP online re-plan)."""
+        eng = state_box["eng"]
+        modeled = eng.plan.schedule.result
+        if modeled is None or len(step_times) < 5:
+            return
+        measured_t = statistics.median(step_times[-args.replan_every :])
+        measured = MeasuredCosts.from_step_timing(
+            list(eng.plan.costs), eng.plan.hw, measured_t, modeled.t_iter
+        )
+        new_eng, replanned = eng.replan(measured, threshold=args.replan_threshold)
+        if replanned:
+            state_box["eng"] = new_eng
+            state_box["step_fn"] = new_eng.make_train_step(opt, mesh, lr=args.lr)
+            # The rebuilt step recompiles and the old engine's samples no
+            # longer describe the new segmentation — restart the window.
+            step_times.clear()
+            state_box["skip_samples"] = 2
+            print(f"[train] step {step}: re-planned "
+                  f"(drift {new_eng.plan.provenance['drift']}) -> "
+                  f"{new_eng.plan.schedule.describe()}")
+
     def do_step(state: RunState, step: int) -> RunState:
         batch = jax.tree.map(jnp.asarray, data.batch_at(step))
-        with jax.set_mesh(mesh):
-            p, o, m = step_fn(state.params, state.opt_state, batch)
+        t0 = time.monotonic()
+        with set_mesh(mesh):
+            p, o, m = state_box["step_fn"](state.params, state.opt_state, batch)
+        if args.replan_every:
+            # timing needs a host-device sync; skip both when re-planning
+            # is off so the dispatch pipeline stays async
+            jax.block_until_ready(p)
+            if step > 1 and not state_box.get("skip_samples"):  # skip compile steps
+                step_times.append(time.monotonic() - t0)
+            elif state_box.get("skip_samples"):
+                state_box["skip_samples"] -= 1
+            if step and step % args.replan_every == 0:
+                maybe_replan(step)
         if step % 10 == 0:
             print(f"[train] step {step} loss {float(m['loss']):.4f}")
         return RunState(step=state.step, params=p, opt_state=o,
                         restarts=state.restarts)
+
+    def on_restart(state: RunState) -> RunState:
+        # Elastic restart: the surviving cluster re-enters planning — the
+        # plan is a pure function of (arch, mesh, α–β), never checkpointed.
+        state_box["eng"] = build_engine()
+        state_box["step_fn"] = state_box["eng"].make_train_step(opt, mesh, lr=args.lr)
+        step_times.clear()
+        print(f"[train] restart at step {state.step}: re-planned -> "
+              f"{state_box['eng'].plan.schedule.describe()}")
+        return state
 
     t0 = time.time()
     final = resilient_loop(
@@ -106,9 +182,13 @@ def main() -> None:
         checkpoint_every=args.ckpt_every,
         max_restarts=args.max_restarts,
         straggler=monitor,
+        on_restart=on_restart,
     )
     print(f"[train] done: {final.step} steps, {final.restarts} restarts, "
           f"{time.time() - t0:.1f}s, {monitor.remediations} straggler remediations")
+    if args.plan_out:
+        path = state_box["eng"].plan.save(args.plan_out)
+        print(f"[train] plan written to {path}")
 
 
 if __name__ == "__main__":

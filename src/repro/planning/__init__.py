@@ -1,0 +1,49 @@
+"""Unified planning subsystem.
+
+Lifecycle (see README):
+
+    cost source  ──►  policy  ──►  Plan  ──►  sync buckets + scan segments
+         ▲                          │
+         └── measured profile ◄── replan_if_drifted (online re-planning)
+
+  * ``registry``  — scheduler policies (`register_policy` / `get_policy`):
+    ``wfbp``, ``synceasgd``, ``fixed``, ``mg_wfbp``, ``dp_optimal``,
+    ``optimal`` + future ones, one extensible interface.
+  * ``plan``      — the frozen, JSON-serializable ``Plan`` artifact.
+  * ``costs``     — ``AnalyticCosts`` (Eq. 18) and ``MeasuredCosts``
+    (wall-clock / HLO segments), plus ``replan_if_drifted``.
+"""
+
+from .costs import (
+    AnalyticCosts,
+    CostSource,
+    MEASURED_HW,
+    MeasuredCosts,
+    cost_drift,
+    replan_if_drifted,
+)
+from .plan import PLAN_FORMAT, Plan, build_plan
+from .registry import (
+    available_policies,
+    build_schedule,
+    get_policy,
+    register_policy,
+    resolve_policy_name,
+)
+
+__all__ = [
+    "AnalyticCosts",
+    "CostSource",
+    "MEASURED_HW",
+    "MeasuredCosts",
+    "cost_drift",
+    "replan_if_drifted",
+    "PLAN_FORMAT",
+    "Plan",
+    "build_plan",
+    "available_policies",
+    "build_schedule",
+    "get_policy",
+    "register_policy",
+    "resolve_policy_name",
+]

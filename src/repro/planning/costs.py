@@ -1,0 +1,208 @@
+"""Cost sources: where the scheduler's per-layer time vector comes from.
+
+The paper seeds Algorithm 1 with *benchmarked* backward times ("the first
+several iterations"); our repo historically only had the analytic Eq. 18
+path.  This module makes the source pluggable:
+
+  * ``AnalyticCosts``  — the Eq. 18 / roofline estimate (flops and bytes
+    per unit converted to seconds by a ``Hardware`` preset);
+  * ``MeasuredCosts``  — wall-clock observations: per-unit times from HLO
+    segment profiling (``core/profiler.py``), or a whole-step timing that
+    rescales the analytic compute model.  Measured times are expressed
+    against ``MEASURED_HW`` (unit hardware: 1 flop == 1 second) so the
+    scheduler math is unchanged.
+
+``replan_if_drifted`` is the journal version's online re-planning: when a
+live cost measurement drifts from the vector a plan was built with, the
+same policy reruns on the measured vector and a successor plan is
+emitted.  The training loop and the fault-tolerant restart path both call
+it (see ``launch/train.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+from ..core.bucketing import layer_buckets_for_scan
+from ..core.cost_model import Hardware, LayerCost, TPU_V5E
+from .plan import Plan
+from .registry import build_schedule, resolve_policy_name
+
+#: Unit hardware: costs carry wall-clock seconds directly in ``bwd_flops``
+#: / ``fwd_flops`` (1 FLOP == 1 s, no memory term).
+MEASURED_HW = Hardware(
+    name="measured_wallclock", peak_flops=1.0, hbm_bw=1.0, mxu_eff=1.0, hbm_eff=1.0
+)
+
+
+@runtime_checkable
+class CostSource(Protocol):
+    """A producer of the scheduler's per-layer cost vector."""
+
+    name: str
+    hw: Hardware
+
+    def layer_costs(self) -> list[LayerCost]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticCosts:
+    """Eq. 18-style analytic cost vector (today's default path)."""
+
+    costs: tuple[LayerCost, ...]
+    hw: Hardware = TPU_V5E
+    name: str = "analytic"
+
+    def layer_costs(self) -> list[LayerCost]:
+        return list(self.costs)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredCosts:
+    """Wall-clock per-unit cost vector (seconds, against ``MEASURED_HW``)."""
+
+    costs: tuple[LayerCost, ...]
+    hw: Hardware = MEASURED_HW
+    name: str = "measured"
+
+    def layer_costs(self) -> list[LayerCost]:
+        return list(self.costs)
+
+    @classmethod
+    def from_unit_times(
+        cls,
+        base: list[LayerCost],
+        bwd_seconds: list[float],
+        fwd_seconds: list[float] | None = None,
+        name: str = "measured",
+    ) -> "MeasuredCosts":
+        """Directly measured per-unit backward (and optional forward) times.
+
+        Message sizes and param counts are carried over from ``base`` —
+        measurement changes *times*, never payloads.
+        """
+        if len(bwd_seconds) != len(base):
+            raise ValueError(f"{len(bwd_seconds)} times for {len(base)} units")
+        if fwd_seconds is not None and len(fwd_seconds) != len(base):
+            raise ValueError(f"{len(fwd_seconds)} fwd times for {len(base)} units")
+        out = []
+        for i, c in enumerate(base):
+            out.append(
+                LayerCost(
+                    name=c.name,
+                    params=c.params,
+                    grad_bytes=c.grad_bytes,
+                    bwd_flops=float(bwd_seconds[i]),
+                    fwd_flops=float(fwd_seconds[i]) if fwd_seconds is not None else 0.0,
+                )
+            )
+        return cls(costs=tuple(out), name=name)
+
+    @classmethod
+    def from_step_timing(
+        cls,
+        base: list[LayerCost],
+        base_hw: Hardware,
+        measured_t_iter: float,
+        modeled_t_iter: float,
+        name: str = "measured_step",
+    ) -> "MeasuredCosts":
+        """Whole-step wall-clock calibration (cheapest online signal).
+
+        One measured iteration time rescales every analytic compute time by
+        ``measured / modeled`` — the single-free-parameter fit the paper
+        itself uses to calibrate Eq. 18 constants.  Comm (α–β) stays fixed,
+        so the compute/comm overlap balance — and hence the optimal merge
+        set — genuinely shifts.
+        """
+        if modeled_t_iter <= 0 or measured_t_iter <= 0:
+            raise ValueError("step times must be positive")
+        scale = measured_t_iter / modeled_t_iter
+        bwd = [c.t_b(base_hw) * scale for c in base]
+        fwd = [c.t_f(base_hw) * scale for c in base]
+        return cls.from_unit_times(base, bwd, fwd, name=name)
+
+    @classmethod
+    def from_segment_times(
+        cls,
+        base: list[LayerCost],
+        base_hw: Hardware,
+        unit_seconds: dict[str, float],
+        name: str = "measured_segments",
+    ) -> "MeasuredCosts":
+        """Per-unit overrides from HLO segment profiling.
+
+        ``unit_seconds`` maps unit names (``embed``, ``stage_0``, ...,
+        ``head``) to measured backward seconds; unmeasured units keep their
+        analytic time.  This is the compiled-segment analogue of the
+        paper's first-iterations benchmark (see ``core/profiler.py``).
+        """
+        bwd = [unit_seconds.get(c.name, c.t_b(base_hw)) for c in base]
+        fwd = [c.t_f(base_hw) for c in base]
+        return cls.from_unit_times(base, bwd, fwd, name=name)
+
+
+def cost_drift(plan: Plan, measured: CostSource) -> float:
+    """Max relative per-unit backward-time deviation of measured vs plan.
+
+    0.0 == identical; 0.5 == some layer's measured backward time is 50%
+    away from what the plan was scheduled with.
+    """
+    base = [c.t_b(plan.hw) for c in plan.costs]
+    new = [c.t_b(measured.hw) for c in measured.layer_costs()]
+    if len(base) != len(new):
+        raise ValueError(f"measured {len(new)} units, plan has {len(base)}")
+    worst = 0.0
+    for b, n in zip(base, new):
+        denom = max(abs(b), 1e-12)
+        worst = max(worst, abs(n - b) / denom)
+    return worst
+
+
+def replan_if_drifted(
+    plan: Plan,
+    measured: CostSource,
+    threshold: float = 0.15,
+    policy: str | None = None,
+) -> tuple[Plan, bool]:
+    """Re-run the plan's policy on measured costs when drift exceeds
+    ``threshold``; returns ``(plan, replanned)``.
+
+    The successor plan keeps the layout and α–β model, swaps in the
+    measured cost vector and its hardware basis, and records the drift and
+    cost source in provenance.  Below threshold the original plan is
+    returned untouched — re-planning recompiles the train step (new scan
+    segments), so it must be rare and deliberate.
+    """
+    drift = cost_drift(plan, measured)
+    if drift <= threshold:
+        return plan, False
+    policy = resolve_policy_name(policy or plan.policy)
+    costs = measured.layer_costs()
+    schedule = build_schedule(
+        policy, costs, plan.ar_model, hw=measured.hw, **plan.policy_opts
+    )
+    segments = (
+        layer_buckets_for_scan(schedule, plan.n_scan_stages)
+        if plan.n_scan_stages is not None
+        else None
+    )
+    prov = dict(plan.provenance)
+    prov.update(
+        {
+            "policy": policy,
+            "cost_source": measured.name,
+            "replanned_from": plan.provenance.get("cost_source", "?"),
+            "drift": f"{drift:.4f}",
+        }
+    )
+    new_plan = dataclasses.replace(
+        plan,
+        costs=tuple(costs),
+        hw=measured.hw,
+        schedule=schedule,
+        segments=segments,
+        provenance=prov,
+    )
+    return new_plan, True

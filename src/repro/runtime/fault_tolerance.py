@@ -17,8 +17,11 @@ container) simulate failures exactly.
   all-reduces fewer and larger, so one slow participant stalls the whole
   step — detection must be cheap and fast.
 * elasticity — on restart with a different device count the MG-WFBP
-  schedule is recomputed (checkpoint layout is schedule-agnostic; see
-  checkpoint.restore_rebucketed).
+  plan is recomputed (checkpoint layout is schedule-agnostic; see
+  checkpoint.restore_rebucketed).  ``resilient_loop`` exposes this as
+  the ``on_restart`` hook: the launcher re-runs the planning pipeline
+  (``planning.replan_if_drifted`` or a fresh policy run at the new N)
+  and swaps in the new train step before the loop resumes.
 """
 
 from __future__ import annotations
@@ -79,6 +82,7 @@ def resilient_loop(
     fault_injector: Callable[[int], None] | None = None,
     straggler: StragglerMonitor | None = None,
     on_straggler: Callable[[RunState], RunState] | None = None,
+    on_restart: Callable[[RunState], RunState] | None = None,
 ) -> RunState:
     """Checkpoint/restart training loop.
 
@@ -86,6 +90,10 @@ def resilient_loop(
     the loop restores the latest complete checkpoint and resumes.  The
     data pipeline needs no state file — batches are pure functions of the
     step (data/pipeline.py), so restored step ⇒ restored stream.
+
+    ``on_restart(state)`` runs after every restore (including restarts
+    from scratch) — the elasticity hook where the launcher re-plans the
+    gradient-merge schedule for the post-failure cluster shape.
     """
     ckpt = AsyncCheckpointer(checkpoint_dir)
     state = init_state()
@@ -117,6 +125,8 @@ def resilient_loop(
             if step is None:
                 state = init_state()
                 state.restarts = restarts
+                if on_restart is not None:
+                    state = on_restart(state)
                 continue
             fresh = init_state()
             tree, extra = restore(
@@ -129,6 +139,8 @@ def resilient_loop(
                 opt_state=tree["opt_state"],
                 restarts=restarts,
             )
+            if on_restart is not None:
+                state = on_restart(state)
     ckpt.wait()
     state.restarts = restarts
     return state

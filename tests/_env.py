@@ -1,0 +1,19 @@
+"""Shared environment for subprocess-based multi-device tests.
+
+Forced-device-count cases run in a subprocess so the main pytest
+process keeps a single CPU device; every such test uses this one env
+(repo-root-relative PYTHONPATH, CPU backend pinned so jax skips the
+60-second TPU probe the container's libtpu otherwise triggers).
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+SUBPROC_ENV = {
+    "PYTHONPATH": str(REPO_ROOT / "src"),
+    "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+    "JAX_PLATFORMS": "cpu",
+}

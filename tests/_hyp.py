@@ -1,0 +1,47 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is an *optional* dev dependency (see pyproject.toml
+``[project.optional-dependencies] test``).  When it is installed, this
+module re-exports the real ``given`` / ``settings`` / ``st``; when it is
+not, property tests decay to ``pytest.mark.skip`` instead of breaking
+collection of the whole module (the non-property tests keep running).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        """Attribute sink: st.integers(...)/st.floats(...) etc. are only
+        evaluated at decoration time and their results never used when the
+        test is skipped."""
+
+        def __getattr__(self, _name):
+            def strategy(*_args, **_kwargs):
+                return None
+
+            return strategy
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -5,6 +5,7 @@ import json
 import subprocess
 import sys
 import textwrap
+from _env import REPO_ROOT, SUBPROC_ENV  # shared subprocess env
 
 import jax
 import jax.numpy as jnp
@@ -51,14 +52,15 @@ COMPRESSION_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, set_mesh, shard_map
     from repro.runtime.compression import compressed_psum_rs_ag
 
-    mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("dp",))
 
     def body(g, res):
         return compressed_psum_rs_ag(g, "dp", res)
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh, axis_names={"dp"},
+    f = jax.jit(shard_map(body, mesh=mesh, axis_names={"dp"},
                  in_specs=(P("dp"), P("dp")), out_specs=(P("dp"), P("dp")),
                  check_vma=False))
 
@@ -66,7 +68,7 @@ COMPRESSION_SCRIPT = textwrap.dedent("""
     # per-device distinct gradients: (8, n) rows = one per device
     g = jax.random.normal(key, (8, 1024), jnp.float32)
     res = jnp.zeros_like(g)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out, new_res = f(g, res)
     exact = jnp.sum(g, axis=0)
     out_rows = np.asarray(out)
@@ -77,7 +79,7 @@ COMPRESSION_SCRIPT = textwrap.dedent("""
     res_norm = float(np.max(np.abs(np.asarray(new_res))))
 
     # second round with error feedback reduces accumulated bias:
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out2, res2 = f(g, new_res)
     two_step = np.asarray(out) + np.asarray(out2)
     exact2 = 2 * np.asarray(exact)
@@ -92,8 +94,8 @@ def test_int8_rs_ag_compression():
     out = subprocess.run(
         [sys.executable, "-c", COMPRESSION_SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
-        cwd="/root/repo",
+        env=SUBPROC_ENV,
+        cwd=REPO_ROOT,
     )
     assert out.returncode == 0, out.stderr[-3000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])

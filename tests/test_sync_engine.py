@@ -8,6 +8,7 @@ import json
 import subprocess
 import sys
 import textwrap
+from _env import REPO_ROOT, SUBPROC_ENV  # shared subprocess env
 
 import pytest
 
@@ -19,6 +20,7 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import make_mesh, set_mesh
     from repro.configs import get_reduced
     from repro.core.comm_model import AllReduceModel
     from repro.core.trainer import MGWFBPEngine, lm_unit_costs
@@ -29,8 +31,7 @@ SCRIPT = textwrap.dedent("""
     method = sys.argv[1]
     arch = sys.argv[2]
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = get_reduced(arch)
     p_shapes = param_specs(cfg)
     ar = AllReduceModel(a=5e-5, b=1e-9)
@@ -62,7 +63,7 @@ SCRIPT = textwrap.dedent("""
     ref_params, _ = sgd_update(g_ref, sgd_init(params, 0.9), params, 1e-2, 0.9)
     ref_params = jax.tree.map(np.asarray, ref_params)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = step.lower(params, opt_state, batch)
         compiled = lowered.compile()
         hlo = compiled.as_text()
@@ -91,8 +92,8 @@ def run_case(method: str, arch: str) -> dict:
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT, method, arch],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
-        cwd="/root/repo",
+        env=SUBPROC_ENV,
+        cwd=REPO_ROOT,
     )
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
