@@ -3,14 +3,27 @@ the roofline summary assembled from dry-run records.
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract:
 each table reports its wall time and emits its rows beneath it.
+
+``--only planning_sweep,wire_layout`` restricts to named tables (CI runs
+exactly that pair in smoke mode and uploads the BENCH_*.json artifacts).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import pathlib
 import sys
 import time
+
+# The wire-layout sweep lowers the sync under shard_map over 8 virtual
+# devices; flags must land before the first jax import.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, "src")
 
@@ -104,10 +117,131 @@ def planning_sweep() -> list[str]:
     return rows
 
 
+def wire_layout() -> list[str]:
+    """Wire-layout sweep: concat vs variadic vs arena × fp32 vs bf16.
+
+    Lowers + compiles the bucketed sync for each (fuse, comm dtype) cell
+    under shard_map on 8 virtual devices, then reads the truth out of the
+    compiled HLO with ``profiler.parse_collectives``: all-reduce op
+    count, all-reduce payload bytes (bytes moved per device per step),
+    and concatenate op count (the copy tax of the concat layout, zero on
+    the arena path).  A numeric check (distinct per-rank scaling, exact
+    expected average) rides along so a cell that mis-packs can never
+    publish.  Full records go to
+    ``benchmarks/results/BENCH_wire_layout.json``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh, shard_map
+    from repro.core import (
+        AllReduceModel,
+        SyncConfig,
+        count_expected_allreduces,
+        group_arenas,
+        make_gradient_sync,
+        parse_collectives,
+        stacked_lm_layout,
+    )
+    from repro.planning import build_schedule
+
+    n_stages = 4
+    shapes = {
+        "embed": {"tok": jnp.zeros((64, 32))},
+        "stages": {"w1": jnp.zeros((n_stages, 32, 32)), "w2": jnp.zeros((n_stages, 32))},
+        "final_norm": {"scale": jnp.zeros((32,))},
+        "head": {"w": jnp.zeros((32, 65))},  # odd tail exercises exact packing
+    }
+    layout = stacked_lm_layout(shapes, n_stages)
+    costs = layout.layer_costs(1 << 20, None)
+    # α tuned so mg_wfbp lands on an intermediate grouping for these costs:
+    # ((1,1), (2,6)) — a lone embed message plus a merged stages+head arena
+    # whose slots include a [0:4) scan slice and an odd-sized head tail
+    schedule = build_schedule("mg_wfbp", costs, AllReduceModel(a=5e-5, b=1e-9))
+    # honor a pre-existing --xla_force_host_platform_device_count (the
+    # module-top guard never overrides one): size the mesh to what exists
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",))
+    key = jax.random.PRNGKey(0)
+    grads = jax.tree.map(
+        lambda s: jax.random.normal(jax.random.fold_in(key, s.size), s.shape), shapes
+    )
+
+    rows = ["table=wire_layout"]
+    records = []
+    for fuse in ("concat", "variadic", "arena"):
+        for comp in (None, "bf16"):
+            cfg = SyncConfig(fuse=fuse, compression=comp)
+            sync = make_gradient_sync(layout, schedule, ("data",), cfg)
+
+            def body(g):
+                r = jax.lax.axis_index("data").astype(jnp.float32)
+                return sync(jax.tree.map(lambda x: x * (r + 1.0), g))
+
+            f = jax.jit(
+                shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                          axis_names={"data"}, check_vma=False)
+            )
+            # lowered (stablehlo) text: the wire dtype is truthful there
+            # (compiled CPU modules upcast bf16 collectives to f32)
+            stats = parse_collectives(f.lower(grads).as_text())
+            got = f(grads)
+            # rank r ships (r+1)·g, so the average is mean(1..n_dev)·g
+            expect = jax.tree.map(lambda x: (n_dev + 1) / 2 * x, grads)
+            max_diff = max(
+                jax.tree.leaves(
+                    jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), got, expect)
+                )
+            )
+            rec = {
+                "fuse": fuse,
+                "comm_dtype": "bf16" if comp else "f32",
+                "n_groups": len(schedule.groups),
+                "allreduce_ops": stats.counts.get("all-reduce", 0),
+                "expected_allreduce_ops": count_expected_allreduces(schedule, cfg, layout),
+                "wire_bytes": stats.bytes_by_kind.get("all-reduce", 0),
+                "concat_ops": stats.concat_ops,
+                "max_diff": max_diff,
+            }
+            if fuse == "arena":
+                rec["arena_bytes"] = sum(
+                    a.nbytes
+                    for a in group_arenas(
+                        layout, schedule, shapes,
+                        jnp.bfloat16 if comp else jnp.float32,
+                    )
+                )
+            records.append(rec)
+            rows.append(
+                f"{fuse},{rec['comm_dtype']},groups={rec['n_groups']},"
+                f"allreduce_ops={rec['allreduce_ops']},"
+                f"wire_bytes={rec['wire_bytes']},concat_ops={rec['concat_ops']},"
+                f"max_diff={max_diff:.2e}"
+            )
+    out = pathlib.Path(__file__).parent / "results" / "BENCH_wire_layout.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(records, indent=1))
+    rows.append(f"wrote {out}")
+    return rows
+
+
 def main() -> None:
     from benchmarks.paper_tables import ALL_TABLES
 
-    tables = list(ALL_TABLES) + [planning_sweep, roofline_summary]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table names (default: all)")
+    args = ap.parse_args()
+
+    tables = list(ALL_TABLES) + [planning_sweep, wire_layout, roofline_summary]
+    if args.only:
+        wanted = {n.strip() for n in args.only.split(",")}
+        unknown = wanted - {fn.__name__ for fn in tables}
+        if unknown:
+            raise SystemExit(f"unknown tables {sorted(unknown)}; "
+                             f"have {[fn.__name__ for fn in tables]}")
+        tables = [fn for fn in tables if fn.__name__ in wanted]
     for fn in tables:
         t0 = time.perf_counter()
         rows = fn()

@@ -18,11 +18,10 @@ import jax.numpy as jnp
 
 from repro.compat import set_mesh
 from repro.configs import get_reduced
-from repro.planning import Plan
 from repro.core import tpu_psum_model
 from repro.core.trainer import MGWFBPEngine
 from repro.data import DataConfig, make_stream
-from repro.checkpoint import latest_step, restore
+from repro.checkpoint import latest_step, load_plan, restore
 from repro.launch.mesh import make_mesh
 from repro.launch.specs import param_specs
 from repro.models.transformer import init_params
@@ -77,23 +76,28 @@ def main():
         num_steps=40, init_state=init_state, train_step=do_step,
         checkpoint_dir=CKPT, checkpoint_every=10,
         fault_injector=fault, straggler=mon,
+        # plan-aware checkpointing: every checkpoint carries the active plan
+        plan_provider=lambda: eng16.plan,
     )
     print(f"phase 1 done: step={state.step} restarts={state.restarts} "
           f"(failure at 25 -> restored from step 20)")
 
-    # The plan is a serializable artifact: persist it beside the weights so
-    # a same-N restart reloads it instead of recomputing Algorithm 1.
-    plan_path = eng16.plan.save(CKPT + "/plan_n16.json")
-    reloaded = Plan.load(plan_path)
-    assert reloaded == eng16.plan
-    print(f"plan artifact round-tripped via {plan_path}")
+    # Same-N restart: the plan rides beside the weights — reload it instead
+    # of recomputing Algorithm 1, and resume under the *exact* schedule the
+    # run crashed with.
+    ck = latest_step(CKPT)
+    stored = load_plan(CKPT, ck)
+    assert stored == eng16.plan
+    eng_resumed = MGWFBPEngine.build(cfg, None, dp_axes=("data",), plan=stored)
+    assert eng_resumed.schedule.groups == eng16.schedule.groups
+    print(f"plan restored from checkpoint step {ck}: {stored.describe()}")
 
-    # phase 2: the cluster grew to "64 chips" — elastic restart:
-    # same checkpoint, new plan from the same policy at the new N
+    # phase 2: the cluster grew to "64 chips" — elastic restart: same
+    # checkpoint (weights are schedule-agnostic), but the stored plan's
+    # α–β model is the old N's, so the same policy re-plans at the new N
     eng64 = make_engine(cfg, shapes, 64)
     print("schedule @ N=64:", eng64.schedule.describe())
     assert eng64.schedule.groups != eng16.schedule.groups or True  # may differ
-    ck = latest_step(CKPT)
     fresh = init_state()
     tree, _ = restore(CKPT, ck, {"params": fresh.params, "opt_state": fresh.opt_state})
     step64 = eng64.make_train_step(opt, mesh, lr=1e-3)

@@ -1,6 +1,7 @@
 from .checkpoint import (
     AsyncCheckpointer,
     latest_step,
+    load_plan,
     restore,
     restore_rebucketed,
     save,
@@ -9,6 +10,7 @@ from .checkpoint import (
 __all__ = [
     "AsyncCheckpointer",
     "latest_step",
+    "load_plan",
     "restore",
     "restore_rebucketed",
     "save",

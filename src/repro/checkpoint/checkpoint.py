@@ -12,6 +12,13 @@ size re-shards on load (jax.device_put against the new mesh) and
 recomputes the MG-WFBP schedule for the new N — ``restore_rebucketed``
 is the one-call path for that.
 
+Plan-aware: ``save(..., plan=...)`` drops the active ``planning.Plan``
+JSON beside the weights (``plan.json`` inside the step directory, same
+atomic rename), and ``load_plan`` returns it — so a same-shape restart
+resumes under the *exact* schedule it crashed with instead of re-running
+Algorithm 1, while an elastic restart (different N) reads the old plan's
+provenance and re-plans.  The weights stay schedule-agnostic either way.
+
 The async writer snapshots device arrays to host (blocking only on the
 transfer), then serializes on a background thread — the paper's
 overlap-communication-with-compute philosophy applied to I/O.
@@ -31,6 +38,7 @@ import numpy as np
 Pytree = Any
 
 _MANIFEST = "manifest.json"
+_PLAN = "plan.json"
 
 
 def _flatten(tree: Pytree) -> tuple[list[tuple[str, np.ndarray]], Any]:
@@ -39,8 +47,32 @@ def _flatten(tree: Pytree) -> tuple[list[tuple[str, np.ndarray]], Any]:
     return named, treedef
 
 
-def save(directory: str | pathlib.Path, step: int, tree: Pytree, extra: dict | None = None) -> pathlib.Path:
-    """Atomic synchronous save; returns the final path."""
+def _plan_text(plan: Any) -> str | None:
+    """Serialize a plan argument: a ``planning.Plan``, a pre-serialized
+    JSON string, or a JSON dict (duck-typed — checkpointing must not
+    depend on the planning package)."""
+    if plan is None:
+        return None
+    if isinstance(plan, str):
+        return plan
+    if hasattr(plan, "to_json"):
+        return plan.to_json()
+    return json.dumps(plan, indent=1)
+
+
+def save(
+    directory: str | pathlib.Path,
+    step: int,
+    tree: Pytree,
+    extra: dict | None = None,
+    plan: Any | None = None,
+) -> pathlib.Path:
+    """Atomic synchronous save; returns the final path.
+
+    ``plan`` (a ``planning.Plan``, its JSON dict, or its JSON text) is
+    written as ``plan.json`` inside the step directory under the same
+    atomic rename — a checkpoint is complete with the schedule it was
+    trained under."""
     directory = pathlib.Path(directory)
     final = directory / f"step_{step:08d}"
     tmp = directory / f"step_{step:08d}.tmp"
@@ -57,10 +89,24 @@ def save(directory: str | pathlib.Path, step: int, tree: Pytree, extra: dict | N
         "extra": extra or {},
     }
     (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=1))
+    plan_text = _plan_text(plan)
+    if plan_text is not None:
+        (tmp / _PLAN).write_text(plan_text)
     if final.exists():
         shutil.rmtree(final)
     tmp.rename(final)
     return final
+
+
+def load_plan(directory: str | pathlib.Path, step: int):
+    """The ``planning.Plan`` stored beside checkpoint ``step`` (None when
+    the checkpoint predates plan-aware saving)."""
+    path = pathlib.Path(directory) / f"step_{step:08d}" / _PLAN
+    if not path.exists():
+        return None
+    from ..planning import Plan
+
+    return Plan.from_json(path.read_text())
 
 
 def latest_step(directory: str | pathlib.Path) -> int | None:
@@ -117,14 +163,19 @@ class AsyncCheckpointer:
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
-    def save(self, step: int, tree: Pytree, extra: dict | None = None) -> None:
+    def save(
+        self, step: int, tree: Pytree, extra: dict | None = None, plan: Any | None = None
+    ) -> None:
         self.wait()
-        # snapshot to host memory synchronously (cheap vs serialization)
+        # snapshot to host memory synchronously (cheap vs serialization);
+        # the plan is serialized now too, so a re-plan after this call
+        # cannot race the background write
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        plan_text = _plan_text(plan)
 
         def work():
             try:
-                save(self.directory, step, host_tree, extra)
+                save(self.directory, step, host_tree, extra, plan=plan_text)
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 

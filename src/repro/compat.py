@@ -11,6 +11,7 @@ the repo goes through this module so the delta lives in one place.
 from __future__ import annotations
 
 import contextlib
+import functools
 from typing import Any
 
 import jax
@@ -18,15 +19,40 @@ import jax
 __all__ = ["shard_map", "set_mesh", "make_mesh", "axis_size", "tpu_compiler_params"]
 
 
+@functools.cache
 def variadic_psum_is_single_op() -> bool:
     """Whether ``psum`` over a tuple lowers to ONE variadic all-reduce op.
 
-    Modern jax/XLA (the versions that ship ``jax.shard_map``) fuse the
-    tuple into a single variadic op; 0.4.x emits one all-reduce per
-    operand and relies on the combiner pass.  Same feature boundary as
-    the shard_map API, so that attribute is the probe.
+    Gated on the jax version first: 0.4.x (no ``jax.shard_map``) is known
+    to emit one all-reduce per operand and rely on XLA's combiner pass —
+    no need to lower anything to find that out.  On modern jax the answer
+    is confirmed by actually lowering a two-operand tuple psum once and
+    counting the all-reduce ops; the probe (and this wrapper) are cached,
+    so the cost is one tiny lowering per process, not one per plan/sync
+    build as before.
     """
-    return hasattr(jax, "shard_map")
+    if not hasattr(jax, "shard_map"):
+        return False
+    return _probe_variadic_psum()
+
+
+@functools.cache
+def _probe_variadic_psum() -> bool:
+    """Lower ``psum((a, b), axis)`` on a 1-device mesh and count ops."""
+    mesh = make_mesh((1,), ("_probe",))
+    P = jax.sharding.PartitionSpec
+
+    def body(x, y):
+        return jax.lax.psum((x, y), "_probe")
+
+    f = shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        axis_names={"_probe"}, check_vma=False,
+    )
+    import jax.numpy as jnp
+
+    text = jax.jit(f).lower(jnp.zeros((8,)), jnp.zeros((4,))).as_text()
+    return text.count("all_reduce") + text.count("all-reduce") <= 1
 
 
 def tpu_compiler_params(**kwargs):

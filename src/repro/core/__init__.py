@@ -6,10 +6,12 @@ Public surface:
   timeline    — WFBP timeline evaluation (paper Eqs. 6–8, 19–21)
   schedule    — Algorithm 1 (MG-WFBP), WFBP/SyncEASGD/fixed-bucket baselines,
                 exhaustive exact optimum
-  bucketing   — param-pytree <-> schedule-bucket mapping (leaf + stacked units)
+  bucketing   — param-pytree <-> schedule-bucket mapping (leaf + stacked
+                units) + the per-group wire plan and flat arena layouts
   sync        — the unified bucketed reducer: one all-reduce per schedule
-                group inside shard_map (see also repro.planning for the
-                Plan artifact / policy registry / cost sources)
+                group inside shard_map, concat | variadic | arena wire
+                layouts (see also repro.planning for the Plan artifact /
+                policy registry / cost sources)
   profiler    — HLO segment cost extraction + collective-traffic parser
 """
 
@@ -19,6 +21,7 @@ from .comm_model import (
     TPU_V5E as TPU_V5E_ICI,
     TpuInterconnect,
     binary_tree,
+    fit_affine,
     paper_cluster_model,
     recursive_doubling,
     recursive_halving_doubling,
@@ -38,13 +41,18 @@ from .schedule import (
     wfbp_schedule,
 )
 from .bucketing import (
+    ArenaSlot,
     CommUnit,
+    GroupArena,
     ParamLayout,
     bucket_assignment,
+    group_arenas,
     layer_buckets_for_scan,
     layout_for_stacked_lm,
     layout_from_params,
     stacked_lm_layout,
+    tree_get,
+    tree_set,
 )
 from .schedule import dp_optimal_schedule
 from .sync import (
@@ -61,6 +69,7 @@ __all__ = [
     "TPU_V5E_ICI",
     "TpuInterconnect",
     "binary_tree",
+    "fit_affine",
     "paper_cluster_model",
     "recursive_doubling",
     "recursive_halving_doubling",
@@ -82,13 +91,18 @@ __all__ = [
     "optimal_schedule",
     "synceasgd_schedule",
     "wfbp_schedule",
+    "ArenaSlot",
     "CommUnit",
+    "GroupArena",
     "ParamLayout",
     "bucket_assignment",
+    "group_arenas",
     "layer_buckets_for_scan",
     "layout_for_stacked_lm",
     "layout_from_params",
     "stacked_lm_layout",
+    "tree_get",
+    "tree_set",
     "dp_optimal_schedule",
     "SyncConfig",
     "count_expected_allreduces",

@@ -15,6 +15,12 @@ The scheduler (``core.schedule``) works on the paper's flat layer list
 
   * ``bucket_assignment`` groups the units according to a ``Schedule`` so
     the sync engine can issue exactly one all-reduce per group;
+  * ``wire_entries`` flattens those groups into the per-group wire plan
+    (leaf entries + contiguous ``[a:b)`` scan-slice entries) and
+    ``group_arenas`` lays each group out as a flat **arena** — exact
+    element offset/size per unit, zero padding, so the arena wire buffer
+    is byte-identical in size to a concatenation of the group while
+    letting ``fuse='arena'`` pack/unpack in place (kernels/comm_pack);
   * stacked-layer models re-bucket by slicing the leading axis, which is
     also how checkpoints are converted when the schedule changes between
     runs (elastic restarts — a different N gives a different α–β model,
@@ -38,6 +44,35 @@ from .schedule import Schedule
 
 LEAF = "leaf"
 STACKED = "stacked"
+
+
+def tree_get(tree: Any, path: tuple[Any, ...]) -> Any:
+    """Indexed lookup on nested dict/list pytrees (jax key objects ok)."""
+    for p in path:
+        if hasattr(p, "key"):
+            tree = tree[p.key]
+        elif hasattr(p, "idx"):
+            tree = tree[p.idx]
+        else:
+            tree = tree[p]
+    return tree
+
+
+def tree_set(tree: Any, path: tuple[Any, ...], value: Any) -> Any:
+    """Functional set on nested dict/list pytrees."""
+    if not path:
+        return value
+    p = path[0]
+    key = p.key if hasattr(p, "key") else p.idx if hasattr(p, "idx") else p
+    if isinstance(tree, dict):
+        new = dict(tree)
+        new[key] = tree_set(tree[key], path[1:], value)
+        return new
+    if isinstance(tree, (list, tuple)):
+        new_l = list(tree)
+        new_l[key] = tree_set(tree[key], path[1:], value)
+        return type(tree)(new_l)
+    raise TypeError(f"unsupported container {type(tree)} at {path}")
 
 
 def normalize_path(path: tuple[Any, ...]) -> tuple[Any, ...]:
@@ -83,6 +118,13 @@ class ParamLayout:
     @property
     def num_layers(self) -> int:
         return len(self.units)
+
+    def group_arenas(
+        self, schedule: Schedule, shapes: Any, comm_dtype: Any = "float32"
+    ) -> "list[GroupArena]":
+        """Per-group flat wire layout for ``fuse='arena'`` (see
+        ``group_arenas`` below for the shape-source contract)."""
+        return group_arenas(self, schedule, shapes, comm_dtype)
 
     def layer_costs(
         self,
@@ -252,6 +294,109 @@ def bucket_assignment(layout: ParamLayout, schedule: Schedule) -> list[list[Comm
     for lo, hi in schedule.groups:
         groups.append([layout.units[i - 1] for i in range(lo, hi + 1)])
     return groups
+
+
+# One wire entry: ('leaf', path, None) or ('slice', path, (a, b)).
+WireEntry = tuple[str, tuple[Any, ...], tuple[int, int] | None]
+
+
+def wire_entries(layout: ParamLayout, schedule: Schedule) -> list[list[WireEntry]]:
+    """Per-group wire plan in backward issue order (layer-L group first).
+
+    Leaf units contribute one entry per leaf path; contiguous stacked
+    units collapse into one ``[a:b)`` slice entry per stacked leaf path.
+    """
+    groups: list[list[WireEntry]] = []
+    for units in reversed(bucket_assignment(layout, schedule)):
+        entries: list[WireEntry] = []
+        runs: dict[tuple, list[int]] = {}
+        for u in units:
+            if u.kind == LEAF:
+                entries.extend(("leaf", p, None) for p in u.paths)
+            else:
+                runs.setdefault(u.paths, []).append(u.stack_index)
+        for paths, idxs in runs.items():
+            a, b = min(idxs), max(idxs) + 1
+            if sorted(idxs) != list(range(a, b)):
+                raise ValueError(f"stacked units in one group must be contiguous: {idxs}")
+            entries.extend(("slice", p, (a, b)) for p in paths)
+        groups.append(entries)
+    return groups
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaSlot:
+    """One wire entry's span inside its group's flat arena."""
+
+    kind: str  # 'leaf' | 'slice'
+    path: tuple[Any, ...]
+    stack_range: tuple[int, int] | None  # [a, b) over the scan axis
+    offset: int  # element offset into the arena
+    size: int  # elements
+    shape: tuple[int, ...]  # shape of the packed value
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupArena:
+    """Flat wire layout of one schedule group.
+
+    Offsets are exact-packed (no per-slot padding): ``size`` equals the
+    sum of slot sizes, so the arena's psum payload is byte-identical to
+    the concat layout's — the arena only removes copies, never adds wire
+    traffic.
+    """
+
+    slots: tuple[ArenaSlot, ...]
+    size: int  # total elements
+    comm_dtype: str
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * np.dtype(self.comm_dtype).itemsize
+
+
+def group_arenas(
+    layout: ParamLayout,
+    schedule: Schedule,
+    shapes: Any,
+    comm_dtype: Any = "float32",
+) -> list[GroupArena]:
+    """Plan-time arena layouts, one per schedule group (backward order).
+
+    ``shapes`` is either the parameter (shape) pytree or a callable
+    ``path -> shape`` — only leaf shapes are consulted, so abstract
+    ``ShapeDtypeStruct`` trees and live gradient trees both work.
+    """
+    if callable(shapes):
+        shape_of = shapes
+    else:
+        def shape_of(p):
+            leaf = tree_get(shapes, p)
+            shape = getattr(leaf, "shape", None)
+            if shape is None:
+                raise TypeError(
+                    f"leaf at {p} has no .shape ({type(leaf).__name__}); pass "
+                    "arrays / ShapeDtypeStructs or a path->shape callable"
+                )
+            return tuple(shape)
+    dtype_name = np.dtype(comm_dtype).name if not isinstance(comm_dtype, str) else comm_dtype
+    arenas = []
+    for entries in wire_entries(layout, schedule):
+        slots, off = [], 0
+        for kind, path, ab in entries:
+            shape = tuple(shape_of(path))
+            if kind == "slice":
+                shape = (ab[1] - ab[0],) + shape[1:]
+            n = int(np.prod(shape)) if shape else 1
+            slots.append(
+                ArenaSlot(
+                    kind=kind, path=path, stack_range=ab,
+                    offset=off, size=n, shape=shape,
+                )
+            )
+            off += n
+        arenas.append(GroupArena(slots=tuple(slots), size=off, comm_dtype=dtype_name))
+    return arenas
 
 
 def layer_buckets_for_scan(schedule: Schedule, num_scan_layers: int) -> tuple[tuple[int, int], ...]:

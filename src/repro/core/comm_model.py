@@ -36,7 +36,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
+from typing import Callable, Sequence
+
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # Classic MPI-style models (paper Table II)
@@ -100,6 +102,26 @@ ALGORITHMS: dict[str, Callable[[int, float, float, float], AllReduceModel]] = {
     "recursive_halving_doubling": recursive_halving_doubling,
     "ring": ring,
 }
+
+
+def fit_affine(
+    nbytes: Sequence[float], seconds: Sequence[float], name: str = "measured"
+) -> AllReduceModel:
+    """Least-squares (a, b) from measured (M, T_ar(M)) pairs.
+
+    This is the fit of the journal version's Fig. 5(b): time real
+    all-reduces over a size sweep, regress T = a + b·M.  Negative
+    intercepts/slopes (possible on noisy tiny sweeps where the size range
+    does not resolve the startup term) are clamped to zero — the
+    schedule math requires a, b ≥ 0 (Eq. 10's merge gain IS ``a``).
+    """
+    x = np.asarray(nbytes, dtype=float)
+    y = np.asarray(seconds, dtype=float)
+    if x.shape != y.shape or x.size < 2:
+        raise ValueError(f"need ≥2 (size, time) pairs, got {x.size}")
+    coeffs, *_ = np.linalg.lstsq(np.stack([np.ones_like(x), x], axis=1), y, rcond=None)
+    a, b = float(coeffs[0]), float(coeffs[1])
+    return AllReduceModel(a=max(a, 0.0), b=max(b, 0.0), name=name)
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,11 @@ shardings gives exact per-segment costs; totals recompose analytically.
 
 Also here: the collective-traffic parser used by the roofline analysis —
 it walks compiled HLO text, sums operand bytes of every collective op, and
-multiplies ops inside `while` loops by their trip count.
+multiplies ops inside `while` loops by their trip count.  It also reads
+*lowered* StableHLO (pre-optimization): on CPU the compiled module
+upcasts bf16 collectives to f32, so wire-dtype truth — what the
+wire-layout benchmark and the bf16/arena byte assertions need — only
+exists before compilation.
 """
 
 from __future__ import annotations
@@ -38,13 +42,31 @@ _COLLECTIVES = (
     "collective-permute",
 )
 
+#: StableHLO op name -> compiled-HLO kind (the parser's canonical keys).
+_STABLEHLO_COLLECTIVES = {
+    "all_reduce": "all-reduce",
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "collective_permute": "collective-permute",
+}
+
 
 @dataclasses.dataclass
 class CollectiveStats:
-    """Aggregated collective traffic of one compiled module (per device)."""
+    """Aggregated collective traffic of one compiled module (per device).
+
+    ``concat_ops`` counts ``concatenate`` ops — not a collective, but the
+    tell-tale of the copy-based merged-buffer wire layout: the arena
+    layout (``core/sync.py`` ``fuse='arena'``) must lower with zero of
+    them, and the wire-layout benchmark reports them per fuse mode.  It
+    is kept out of ``counts``/``total_bytes`` so roofline collective
+    traffic is unchanged.
+    """
 
     counts: dict[str, int]
     bytes_by_kind: dict[str, int]
+    concat_ops: int = 0
 
     @property
     def total_ops(self) -> int:
@@ -83,8 +105,64 @@ def _result_shapes(line: str) -> list[str]:
     return [res]
 
 
+def _tensor_bytes(tensor_type: str) -> int:
+    """Bytes of one StableHLO tensor type body like '100x32xbf16' / 'f32'."""
+    parts = tensor_type.strip().split("x")
+    dtype = parts[-1]
+    if dtype not in _DTYPE_BYTES:
+        # stablehlo integer spellings: i8/i32/ui8... -> s8/s32/u8
+        alias = {"i": "s", "ui": "u"}
+        m = re.match(r"(ui|i)(\d+)$", dtype)
+        dtype = f"{alias[m.group(1)]}{m.group(2)}" if m else dtype
+        if dtype not in _DTYPE_BYTES:
+            return 0
+    n = 1
+    for d in parts[:-1]:
+        if not d.isdigit():
+            return 0
+        n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _parse_stablehlo(text: str) -> CollectiveStats:
+    """Collective stats from lowered (StableHLO) module text.
+
+    Ops with regions (all_reduce) put their type signature on the
+    region-closing ``}) : (...) -> ...`` line; the first ``->`` after the
+    op start is that signature either way, so a forward scan suffices.
+
+    Counts are *static*: StableHLO ``while`` bodies carry no trip-count
+    annotation, so a collective inside a scanned body counts once — use
+    compiled-HLO text when loop-multiplied totals matter (the dry-run /
+    roofline path does), lowered text when wire dtypes matter.
+    """
+    counts: dict[str, int] = {}
+    nbytes: dict[str, int] = {}
+    concat_ops = len(re.findall(r"stablehlo\.concatenate", text))
+    for m in re.finditer(r'"?stablehlo\.(\w+)"?[(<]', text):
+        kind = _STABLEHLO_COLLECTIVES.get(m.group(1))
+        if kind is None:
+            continue
+        tail = text[m.end() : m.end() + 8000]
+        tm = re.search(r"->\s*(\([^)]*\)|tensor<[^>]*>)", tail)
+        payload = (
+            sum(_tensor_bytes(t) for t in re.findall(r"tensor<([^>]*)>", tm.group(1)))
+            if tm
+            else 0
+        )
+        counts[kind] = counts.get(kind, 0) + 1
+        nbytes[kind] = nbytes.get(kind, 0) + payload
+    return CollectiveStats(counts=counts, bytes_by_kind=nbytes, concat_ops=concat_ops)
+
+
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     """Count collective ops and payload bytes in compiled HLO text.
+
+    Lowered StableHLO text is detected and parsed too — use that form
+    whenever the *wire dtype* matters (compiled CPU modules upcast bf16
+    collectives to f32), but note the while-loop multiplication below is
+    compiled-HLO-only (StableHLO has no trip-count annotation, so
+    loop-body collectives count once there).
 
     * operand bytes are taken from the op's *result* shapes (for all-reduce
       result==operand; for all-gather the result is the gathered size which
@@ -95,14 +173,21 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
       when XLA printed a known trip count comment, else by the scan length
       inferred from the loop induction comparison.
     """
+    if "stablehlo." in hlo_text:
+        return _parse_stablehlo(hlo_text)
+
     counts: dict[str, int] = {}
     nbytes: dict[str, int] = {}
+    concat_ops = 0
 
     # Map computation name -> list of (kind, payload)
     comp_ops: dict[str, list[tuple[str, int]]] = {}
     comp_name = None
     for line in hlo_text.splitlines():
         stripped = line.strip()
+        # data-movement tell-tale (compiled HLO and stablehlo spellings)
+        if re.search(r"(?:\s|=\s*)concatenate\(|stablehlo\.concatenate", stripped):
+            concat_ops += 1
         m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->", stripped)
         if m and ("{" in stripped or stripped.endswith("{")):
             comp_name = m.group(1)
@@ -137,7 +222,7 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
             counts[kind] = counts.get(kind, 0) + (trip - 1)
             nbytes[kind] = nbytes.get(kind, 0) + payload * (trip - 1)
 
-    return CollectiveStats(counts=counts, bytes_by_kind=nbytes)
+    return CollectiveStats(counts=counts, bytes_by_kind=nbytes, concat_ops=concat_ops)
 
 
 @dataclasses.dataclass

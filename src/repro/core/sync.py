@@ -24,20 +24,32 @@ The WFBP / SyncEASGD / MG-WFBP distinction is *entirely* in the schedule
 a policy produced — there is no separate strategy switch (the old
 ``SyncConfig.strategy`` is absorbed by ``planning.registry`` aliases).
 
-Two wire layouts:
+Three wire layouts:
 
   ``concat``    — each group's encoded leaves are flattened into one
                   buffer and reduced with a single ``psum``: the merged
                   message of Definition 1, guaranteed one all-reduce HLO
-                  op per group on every jax/XLA version (one copy each
-                  way, like B-Caffe's fused buffer).
+                  op per group on every jax/XLA version — but the merge
+                  is paid for with a full extra round-trip of gradient
+                  memory traffic (concatenate in, split out).
   ``variadic``  — one ``psum`` over the tuple of leaves (zero-copy);
-                  newer XLA lowers this to a single variadic all-reduce,
-                  older versions emit one op per leaf and rely on the
-                  all-reduce combiner.
+                  newer XLA lowers this to a single variadic all-reduce
+                  (``compat.variadic_psum_is_single_op``), older versions
+                  emit one op per leaf and rely on the combiner.
+  ``arena``     — the merged buffer without the merge tax: each group's
+                  leaves are packed into a preallocated flat arena by the
+                  ``kernels/comm_pack`` pack kernel (wire-dtype cast and
+                  optional error-feedback residual fused in), reduced
+                  with one ``psum``, and unpacked (decompress + DP
+                  average fused).  One all-reduce HLO op per group on
+                  every jax version, zero concatenate ops, and the only
+                  copies are the cast the wire needed anyway.
 
-plus ``compressed`` wrappers (bf16 + error feedback) as the
-communication-dtype option discussed in DESIGN.md.
+``compression='bf16'`` halves fp32 wire traffic on any layout;
+``'bf16_ef'`` (arena only) additionally carries the rounding error in a
+local error-feedback residual — the EF-SGD trick of
+``runtime/compression.py`` fused into the pack —  at which point the
+sync is stateful: ``sync(grads, residual) -> (grads, residual)``.
 """
 
 from __future__ import annotations
@@ -50,38 +62,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import axis_size, variadic_psum_is_single_op
-from .bucketing import LEAF, ParamLayout, bucket_assignment
+from ..kernels.comm_pack import pack_arena, unpack_arena
+from .bucketing import (
+    ParamLayout,
+    WireEntry,
+    group_arenas,
+    tree_get as _get,
+    tree_set as _set,
+    wire_entries,
+)
 from .schedule import Schedule
 
 Pytree = Any
 
-
-def _get(tree: Pytree, path: tuple[Any, ...]) -> Any:
-    for p in path:
-        if hasattr(p, "key"):
-            tree = tree[p.key]
-        elif hasattr(p, "idx"):
-            tree = tree[p.idx]
-        else:
-            tree = tree[p]
-    return tree
-
-
-def _set(tree: Pytree, path: tuple[Any, ...], value: Any) -> Pytree:
-    """Functional set on nested dict/list pytrees."""
-    if not path:
-        return value
-    p = path[0]
-    key = p.key if hasattr(p, "key") else p.idx if hasattr(p, "idx") else p
-    if isinstance(tree, dict):
-        new = dict(tree)
-        new[key] = _set(tree[key], path[1:], value)
-        return new
-    if isinstance(tree, (list, tuple)):
-        new_l = list(tree)
-        new_l[key] = _set(tree[key], path[1:], value)
-        return type(tree)(new_l)
-    raise TypeError(f"unsupported container {type(tree)} at {path}")
+__all__ = [
+    "SyncConfig",
+    "WireEntry",
+    "count_expected_allreduces",
+    "make_gradient_sync",
+    "wire_entries",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,10 +92,13 @@ class SyncConfig:
                   bucket — required for the merged buffer, and how real
                   systems ship grads anyway).
     average     : divide by the DP world size after summing.
-    compression : None | 'bf16' (int8 adds error-feedback state and lives
-                  in ``runtime/compression.py``).
+    compression : None | 'bf16' | 'bf16_ef' (arena only; int8 lives in
+                  ``runtime/compression.py``).
     fuse        : 'concat' (one flat buffer per group, exactly one
-                  all-reduce op) | 'variadic' (tuple psum, zero-copy).
+                  all-reduce op, copy each way) | 'variadic' (tuple psum,
+                  zero-copy, op count is version-dependent) | 'arena'
+                  (packed flat buffer via kernels/comm_pack: one op per
+                  group AND no concatenate copies).
 
     Which layers ride together is NOT configured here — that is the
     schedule, produced by a ``planning.registry`` policy.
@@ -106,33 +109,11 @@ class SyncConfig:
     compression: str | None = None
     fuse: str = "concat"
 
-
-# One wire entry: ('leaf', path, None) or ('slice', path, (a, b)).
-WireEntry = tuple[str, tuple[Any, ...], tuple[int, int] | None]
-
-
-def wire_entries(layout: ParamLayout, schedule: Schedule) -> list[list[WireEntry]]:
-    """Per-group wire plan in backward issue order (layer-L group first).
-
-    Leaf units contribute one entry per leaf path; contiguous stacked
-    units collapse into one ``[a:b)`` slice entry per stacked leaf path.
-    """
-    groups: list[list[WireEntry]] = []
-    for units in reversed(bucket_assignment(layout, schedule)):
-        entries: list[WireEntry] = []
-        runs: dict[tuple, list[int]] = {}
-        for u in units:
-            if u.kind == LEAF:
-                entries.extend(("leaf", p, None) for p in u.paths)
-            else:
-                runs.setdefault(u.paths, []).append(u.stack_index)
-        for paths, idxs in runs.items():
-            a, b = min(idxs), max(idxs) + 1
-            if sorted(idxs) != list(range(a, b)):
-                raise ValueError(f"stacked units in one group must be contiguous: {idxs}")
-            entries.extend(("slice", p, (a, b)) for p in paths)
-        groups.append(entries)
-    return groups
+    @property
+    def wire_dtype(self) -> Any:
+        if self.compression in ("bf16", "bf16_ef"):
+            return jnp.bfloat16
+        return self.comm_dtype
 
 
 def make_gradient_sync(
@@ -140,25 +121,40 @@ def make_gradient_sync(
     schedule: Schedule,
     dp_axes: tuple[str, ...],
     config: SyncConfig = SyncConfig(),
-) -> Callable[[Pytree], Pytree]:
+) -> Callable[..., Pytree]:
     """Build ``sync_fn(grads) -> reduced_grads`` for use inside shard_map.
 
-    One all-reduce is issued per schedule group (``fuse='concat'``);
-    ``count_expected_allreduces`` states the invariant and
-    ``tests/test_planning.py`` pins it against lowered HLO.
+    One all-reduce is issued per schedule group (``fuse='concat'`` /
+    ``'arena'``); ``count_expected_allreduces`` states the invariant and
+    the tier-1 suite pins it against lowered HLO.  With
+    ``compression='bf16_ef'`` the returned function is stateful:
+    ``sync_fn(grads, residual) -> (reduced_grads, new_residual)`` where
+    ``residual`` is an f32 pytree of ``grads``' structure (zeros to
+    start) carrying each device's local quantization error.
     """
-    if config.fuse not in ("concat", "variadic"):
+    if config.fuse not in ("concat", "variadic", "arena"):
         raise ValueError(f"unknown fuse mode {config.fuse!r}")
+    if config.compression == "bf16_ef" and config.fuse != "arena":
+        raise ValueError("error-feedback compression requires fuse='arena'")
     group_entries = wire_entries(layout, schedule)
+    stateful = config.compression == "bf16_ef"
 
-    def sync(grads: Pytree) -> Pytree:
+    def sync(grads: Pytree, residual: Pytree | None = None):
+        if stateful and residual is None:
+            raise ValueError("compression='bf16_ef' needs the residual pytree")
         world = 1.0
         for ax in dp_axes:
             world *= axis_size(ax)
         out = grads
+        res_out = residual
         # Issue groups in backward order (layer-L group first), matching the
         # availability order the schedule was optimized for.
         for entries in group_entries:
+            if config.fuse == "arena":
+                out, res_out = _arena_group(
+                    entries, grads, out, res_out, dp_axes, world, config
+                )
+                continue
             vals, metas = [], []
             for kind, path, ab in entries:
                 g = _get(grads, path)
@@ -181,17 +177,68 @@ def make_gradient_sync(
             else:
                 parts = list(jax.lax.psum(tuple(vals), dp_axes))
             for (kind, path, ab, dt, _), r in zip(metas, parts):
-                r = _decode(r, dt, config)
+                r = r.astype(dt)
                 if config.average:
                     r = (r.astype(jnp.float32) / world).astype(dt)
-                if kind == "leaf":
-                    out = _set(out, path, r)
-                else:
-                    cur = _get(out, path)
-                    out = _set(out, path, cur.at[ab[0] : ab[1]].set(r.astype(cur.dtype)))
-        return out
+                out = _write_back(out, kind, path, ab, r)
+        return (out, res_out) if stateful else out
 
     return sync
+
+
+def _arena_group(
+    entries: list[WireEntry],
+    grads: Pytree,
+    out: Pytree,
+    residual: Pytree | None,
+    dp_axes: tuple[str, ...],
+    world,
+    config: SyncConfig,
+) -> tuple[Pytree, Pytree | None]:
+    """One group over the arena wire path: pack(+cast[+EF]) -> one psum
+    -> unpack(+decompress+average).  The arena layout is the plan-time
+    ``bucketing.group_arenas`` layout, re-derived here from the traced
+    gradient shapes (identical by construction — ``test_arena`` pins it).
+    """
+    parts, resid, metas = [], [], []
+    off = 0
+    for kind, path, ab in entries:
+        g = _get(grads, path)
+        if kind == "slice":
+            g = g[ab[0] : ab[1]]
+        if residual is not None:
+            r = _get(residual, path)
+            resid.append(r[ab[0] : ab[1]] if kind == "slice" else r)
+        n = int(np.prod(g.shape)) if g.shape else 1
+        metas.append((kind, path, ab, g.dtype, g.shape, off, n))
+        parts.append(g)
+        off += n
+    arena, new_res = pack_arena(
+        parts, [m[5] for m in metas], off, config.wire_dtype,
+        residuals=resid if residual is not None else None,
+    )
+    red = jax.lax.psum(arena, dp_axes)
+    scale = (1.0 / world) if config.average else 1.0
+    unpacked = unpack_arena(
+        red,
+        [(m[5], m[6]) for m in metas],
+        [m[4] for m in metas],
+        [m[3] for m in metas],
+        scale=scale,
+    )
+    for (kind, path, ab, _, _, _, _), r in zip(metas, unpacked):
+        out = _write_back(out, kind, path, ab, r)
+    if new_res is not None:
+        for (kind, path, ab, _, _, _, _), r in zip(metas, new_res):
+            residual = _write_back(residual, kind, path, ab, r)
+    return out, residual
+
+
+def _write_back(tree: Pytree, kind: str, path, ab, value: jax.Array) -> Pytree:
+    if kind == "leaf":
+        return _set(tree, path, value)
+    cur = _get(tree, path)
+    return _set(tree, path, cur.at[ab[0] : ab[1]].set(value.astype(cur.dtype)))
 
 
 def _encode(g: jax.Array, config: SyncConfig) -> jax.Array:
@@ -200,13 +247,7 @@ def _encode(g: jax.Array, config: SyncConfig) -> jax.Array:
     psum (the switch reduces in-flight); the int8 error-feedback path lives
     in ``runtime/compression.py`` and uses a reduce-scatter + quantized
     all-gather decomposition instead of this hook."""
-    if config.compression == "bf16":
-        return g.astype(jnp.bfloat16)
-    return g.astype(config.comm_dtype)
-
-
-def _decode(r: jax.Array, orig_dtype: Any, config: SyncConfig) -> jax.Array:
-    return r.astype(orig_dtype)
+    return g.astype(config.wire_dtype)
 
 
 def count_expected_allreduces(
@@ -216,12 +257,16 @@ def count_expected_allreduces(
 ) -> int:
     """Gradient all-reduce ops the sync lowers to.
 
-    'concat' fuses each group into one buffer — exactly one op per group
-    on every jax version.  'variadic' issues one psum per group: modern
-    XLA lowers that to a single variadic op per group too, while 0.4.x
-    emits one op per operand — the honest expectation there needs the
-    layout (wire-leaf count per group).
+    'concat' and 'arena' reduce one flat buffer per group — exactly one
+    op per group on every jax version.  'variadic' issues one psum per
+    group: modern XLA lowers that to a single variadic op per group too,
+    while 0.4.x emits one op per operand — the honest expectation there
+    needs the layout (wire-leaf count per group).
     """
-    if config.fuse == "concat" or layout is None or variadic_psum_is_single_op():
+    if (
+        config.fuse in ("concat", "arena")
+        or layout is None
+        or variadic_psum_is_single_op()
+    ):
         return len(schedule.groups)
     return sum(len(entries) for entries in wire_entries(layout, schedule))

@@ -1,0 +1,12 @@
+from .kernel import pack_arena_pallas, unpack_arena_pallas
+from .ops import pack_arena, unpack_arena
+from .ref import pack_arena_ref, unpack_arena_ref
+
+__all__ = [
+    "pack_arena",
+    "pack_arena_pallas",
+    "pack_arena_ref",
+    "unpack_arena",
+    "unpack_arena_pallas",
+    "unpack_arena_ref",
+]

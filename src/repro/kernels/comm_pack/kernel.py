@@ -1,0 +1,177 @@
+"""Pallas TPU kernels for the gradient-arena wire path.
+
+One ``pallas_call`` per schedule group, both directions.  The gradient
+parts and the arena live in ``ANY`` (compiler-placed, HBM at these
+sizes); the kernel streams each part through a small VMEM staging buffer
+with explicit async copies:
+
+    pack    part[c:c+m] ──DMA──► VMEM ──cast(+EF)──► VMEM ──DMA──► arena[off+c:]
+    unpack  arena[off+c:] ──DMA──► VMEM ──cast·scale──► VMEM ──DMA──► part[c:]
+
+so the bf16 (or any wire-dtype) cast — and optionally the
+error-feedback residual add/update of ``runtime/compression.py`` — costs
+zero extra HBM round-trips: exactly one read of the gradients and one
+write of the arena, where XLA's concatenate layout pays a full extra
+copy each way.  Slot offsets are exact-packed (element granularity; the
+wire buffer is byte-identical in size to the concat layout) — TPU DMAs
+take arbitrary element offsets, trading a little engine efficiency on
+odd tails for never shipping padding over the wire.
+
+The chunk loop is unrolled at trace time (sizes are static) and single-
+buffered for clarity; double-buffering the staging copies is a local
+change (see the DMA-pipeline pattern in flash_attention) left until a
+profile shows these group-sized copies anywhere near the critical path —
+the arena pack replaces copies XLA was *already* making.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: Staging-buffer length in elements (f32: 256 KiB — comfortably inside
+#: VMEM next to its wire-dtype twin).
+DEFAULT_CHUNK = 1 << 16
+
+_ANY = pl.BlockSpec(memory_space=pltpu.ANY)
+
+
+def _copy(src_ref, dst_ref, sem) -> None:
+    cp = pltpu.make_async_copy(src_ref, dst_ref, sem)
+    cp.start()
+    cp.wait()
+
+
+def _pack_kernel(
+    *refs,
+    sizes: tuple[int, ...],
+    offsets: tuple[int, ...],
+    chunk: int,
+    comm_dtype: Any,
+    ef: bool,
+):
+    n = len(sizes)
+    parts = refs[:n]
+    resid = refs[n : 2 * n] if ef else ()
+    outs = refs[2 * n :] if ef else refs[n:]
+    arena, new_res = outs[0], outs[1:]
+
+    for i in range(n):
+        ck = min(chunk, sizes[i])
+
+        def part(src, wire, sem, res=None, i=i, ck=ck):
+            for c0 in range(0, sizes[i], ck):
+                m = min(ck, sizes[i] - c0)
+                _copy(parts[i].at[pl.ds(c0, m)], src.at[pl.ds(0, m)], sem)
+                x = src[pl.ds(0, m)].astype(jnp.float32)
+                if ef:
+                    _copy(resid[i].at[pl.ds(c0, m)], res.at[pl.ds(0, m)], sem)
+                    x = x + res[pl.ds(0, m)]
+                w = x.astype(comm_dtype)
+                wire[pl.ds(0, m)] = w
+                _copy(wire.at[pl.ds(0, m)], arena.at[pl.ds(offsets[i] + c0, m)], sem)
+                if ef:
+                    res[pl.ds(0, m)] = x - w.astype(jnp.float32)
+                    _copy(res.at[pl.ds(0, m)], new_res[i].at[pl.ds(c0, m)], sem)
+
+        scratch = dict(
+            src=pltpu.VMEM((ck,), parts[i].dtype),
+            wire=pltpu.VMEM((ck,), comm_dtype),
+            sem=pltpu.SemaphoreType.DMA(()),
+        )
+        if ef:
+            scratch["res"] = pltpu.VMEM((ck,), jnp.float32)
+        pl.run_scoped(part, **scratch)
+
+
+def pack_arena_pallas(
+    parts: Sequence[jax.Array],  # flattened 1-D gradient parts
+    offsets: Sequence[int],
+    size: int,
+    comm_dtype: Any,
+    residuals: Sequence[jax.Array] | None = None,  # 1-D f32
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> tuple[jax.Array, list[jax.Array] | None]:
+    """Fused pack(+cast[+error-feedback]) of one group's wire arena."""
+    ef = residuals is not None
+    sizes = tuple(int(p.size) for p in parts)
+    kernel = functools.partial(
+        _pack_kernel,
+        sizes=sizes,
+        offsets=tuple(int(o) for o in offsets),
+        chunk=chunk,
+        comm_dtype=comm_dtype,
+        ef=ef,
+    )
+    out_shape = [jax.ShapeDtypeStruct((size,), comm_dtype)]
+    if ef:
+        out_shape += [jax.ShapeDtypeStruct((s,), jnp.float32) for s in sizes]
+    operands = list(parts) + (list(residuals) if ef else [])
+    out = pl.pallas_call(
+        kernel,
+        in_specs=[_ANY] * len(operands),
+        out_specs=[_ANY] * len(out_shape),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    return (out[0], list(out[1:])) if ef else (out[0], None)
+
+
+def _unpack_kernel(
+    arena,
+    scale_ref,  # (1,) f32 in SMEM: the DP averaging factor
+    *outs,
+    slots: tuple[tuple[int, int], ...],
+    dtypes: tuple[Any, ...],
+    chunk: int,
+):
+    for i, (off, sz) in enumerate(slots):
+        ck = min(chunk, sz)
+
+        def part(wire, dst, sem, i=i, off=off, sz=sz, ck=ck):
+            for c0 in range(0, sz, ck):
+                m = min(ck, sz - c0)
+                _copy(arena.at[pl.ds(off + c0, m)], wire.at[pl.ds(0, m)], sem)
+                x = wire[pl.ds(0, m)].astype(jnp.float32) * scale_ref[0]
+                dst[pl.ds(0, m)] = x.astype(dtypes[i])
+                _copy(dst.at[pl.ds(0, m)], outs[i].at[pl.ds(c0, m)], sem)
+
+        pl.run_scoped(
+            part,
+            wire=pltpu.VMEM((ck,), arena.dtype),
+            dst=pltpu.VMEM((ck,), dtypes[i]),
+            sem=pltpu.SemaphoreType.DMA(()),
+        )
+
+
+def unpack_arena_pallas(
+    arena: jax.Array,
+    slots: Sequence[tuple[int, int]],  # (offset, size) per part
+    dtypes: Sequence[Any],
+    scale: jax.Array,  # shape-(1,) f32
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> list[jax.Array]:
+    """Fused unpack(+decompress+average) of one reduced arena."""
+    kernel = functools.partial(
+        _unpack_kernel,
+        slots=tuple((int(o), int(s)) for o, s in slots),
+        dtypes=tuple(dtypes),
+        chunk=chunk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        in_specs=[_ANY, pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=[_ANY] * len(slots),
+        out_shape=[jax.ShapeDtypeStruct((s,), dt) for (_, s), dt in zip(slots, dtypes)],
+        interpret=interpret,
+    )(arena, scale.astype(jnp.float32).reshape(1))
+    return list(out)

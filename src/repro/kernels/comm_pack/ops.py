@@ -1,0 +1,74 @@
+"""Public ops for the gradient-arena wire path: Pallas on TPU, the
+``dynamic_update_slice``/``slice`` oracle otherwise.  Both paths lower
+with ZERO concatenate ops — the oracle is not just a test double, it is
+the production CPU/GPU layout (XLA turns the update-slice chain into
+in-place writes on the preallocated buffer).
+
+Parts may be arbitrary-shaped gradient leaves / scan slices; flattening
+to the 1-D wire layout happens here so the kernels only see flat spans.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import pack_arena_pallas, unpack_arena_pallas
+from .ref import pack_arena_ref, unpack_arena_ref
+
+
+def _use_pallas(use_pallas: bool | None) -> bool:
+    return jax.default_backend() == "tpu" if use_pallas is None else use_pallas
+
+
+def pack_arena(
+    parts: Sequence[jax.Array],
+    offsets: Sequence[int],
+    size: int,
+    comm_dtype: Any,
+    residuals: Sequence[jax.Array] | None = None,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, list[jax.Array] | None]:
+    """Pack one group's parts into its flat wire arena.
+
+    Fuses the wire-dtype cast, and — when ``residuals`` (f32, same
+    structure) is given — the error-feedback accumulate/update.  Returns
+    ``(arena, new_residuals)``; residuals keep the parts' shapes.
+    """
+    flat = [p.reshape(-1) for p in parts]
+    res_flat = None if residuals is None else [r.reshape(-1) for r in residuals]
+    if _use_pallas(use_pallas) or interpret:
+        arena, new_res = pack_arena_pallas(
+            flat, offsets, size, comm_dtype, res_flat, interpret=interpret
+        )
+    else:
+        arena, new_res = pack_arena_ref(flat, offsets, size, comm_dtype, res_flat)
+    if new_res is not None:
+        new_res = [r.reshape(p.shape) for r, p in zip(new_res, parts)]
+    return arena, new_res
+
+
+def unpack_arena(
+    arena: jax.Array,
+    slots: Sequence[tuple[int, int]],  # (offset, size) per part
+    shapes: Sequence[tuple[int, ...]],
+    dtypes: Sequence[Any],
+    scale: jax.Array | float = 1.0,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> list[jax.Array]:
+    """Slice the reduced arena back into parts (decompress + DP-average
+    fused); parts come back in their original shapes/dtypes."""
+    if _use_pallas(use_pallas) or interpret:
+        out = unpack_arena_pallas(
+            arena, slots, dtypes, jnp.asarray(scale, jnp.float32).reshape(1),
+            interpret=interpret,
+        )
+    else:
+        out = unpack_arena_ref(arena, slots, dtypes, scale)
+    return [p.reshape(s) for p, s in zip(out, shapes)]

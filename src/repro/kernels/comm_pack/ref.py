@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the gradient-arena pack/unpack pair.
+
+Pack writes each (flattened) gradient part into its slot of one flat wire
+arena with ``dynamic_update_slice`` — no ``concatenate`` in the lowering,
+which is the whole point of the arena wire layout (``core/sync.py``
+``fuse='arena'``): XLA updates the preallocated buffer in place instead
+of materializing a second copy of every group's gradients.
+
+The wire-dtype cast is fused into the pack; optionally so is the
+error-feedback residual (``runtime/compression.py``): the carried
+quantization error is re-added *before* the cast and the new residual is
+whatever the cast dropped.  Unpack fuses the inverse cast and the DP
+averaging scale.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_arena_ref(
+    parts: Sequence[jax.Array],  # flattened 1-D gradient parts
+    offsets: Sequence[int],  # element offset of each part in the arena
+    size: int,  # total arena elements (== sum of part sizes)
+    comm_dtype: Any,
+    residuals: Sequence[jax.Array] | None = None,  # 1-D f32, same sizes
+) -> tuple[jax.Array, list[jax.Array] | None]:
+    """(arena, new_residuals) — residuals None for the stateless cast."""
+    arena = jnp.zeros((size,), comm_dtype)
+    new_res: list[jax.Array] | None = None if residuals is None else []
+    for i, (p, off) in enumerate(zip(parts, offsets)):
+        if residuals is not None:
+            acc = p.astype(jnp.float32) + residuals[i].astype(jnp.float32)
+            wire = acc.astype(comm_dtype)
+            new_res.append(acc - wire.astype(jnp.float32))
+        else:
+            wire = p.astype(comm_dtype)
+        arena = jax.lax.dynamic_update_slice(arena, wire, (off,))
+    return arena, new_res
+
+
+def unpack_arena_ref(
+    arena: jax.Array,  # 1-D reduced wire buffer
+    slots: Sequence[tuple[int, int]],  # (offset, size) per part
+    dtypes: Sequence[Any],  # destination dtype per part
+    scale: jax.Array | float = 1.0,  # DP averaging factor (1/world)
+) -> list[jax.Array]:
+    """Static slices out of the reduced arena, decompress + scale fused."""
+    out = []
+    for (off, n), dt in zip(slots, dtypes):
+        seg = jax.lax.slice(arena, (off,), (off + n,))
+        out.append((seg.astype(jnp.float32) * scale).astype(dt))
+    return out

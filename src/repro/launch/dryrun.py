@@ -95,7 +95,7 @@ def model_flops_per_step(cfg, shape) -> float:
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp_data=True,
                n_microbatches: int = 1, skip_segments: bool = False,
-               overrides: dict | None = None) -> dict:
+               overrides: dict | None = None, comm_fit: dict | None = None) -> dict:
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = arch_config_for_shape(arch, shape_name, cost_mode=False)
@@ -194,24 +194,28 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp_data=True,
         rec["segments"] = segment_costs(arch, shape_name, mesh, rules, overrides)
         rec["totals"] = recompose(cfg, shape, rec, n_dev)
     if shape.kind == "train":
-        rec["plan"] = plan_record(cfg, shape, rec.get("segments"), mesh, n_dev)
+        rec["plan"] = plan_record(cfg, shape, rec.get("segments"), mesh, n_dev,
+                                  comm_fit=comm_fit)
     return rec
 
 
-def plan_record(cfg, shape, segs, mesh, n_dev) -> dict:
+def plan_record(cfg, shape, segs, mesh, n_dev, comm_fit=None) -> dict:
     """Serialized MG-WFBP plan(s) for this train cell.
 
     The analytic plan comes from Eq. 18 costs; when HLO segments were
     profiled, a measured plan re-runs the policy on per-unit segment
     times (``MeasuredCosts.from_segment_times``) — the dry-run analogue
-    of the journal version's online re-plan.  Restarts and benchmarks
-    reload these records instead of recomputing Algorithm 1.
+    of the journal version's online re-plan.  ``comm_fit`` (a serialized
+    ``MeasuredComm`` sweep, --comm-fit) swaps the analytic α–β model for
+    a measured fit.  Restarts and benchmarks reload these records
+    instead of recomputing Algorithm 1; each plan carries its per-group
+    arena wire layout (``fuse='arena'`` buffer sizes).
     """
     from repro.core import tpu_psum_model
     from repro.core.bucketing import stacked_lm_layout
     from repro.core.cost_model import TPU_V5E as HW_V5E
     from repro.core.trainer import lm_unit_costs
-    from repro.planning import MeasuredCosts, build_plan, replan_if_drifted
+    from repro.planning import MeasuredComm, MeasuredCosts, build_plan, replan_if_drifted
 
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     model_shards = axis_sizes.get("model", 1)
@@ -223,12 +227,26 @@ def plan_record(cfg, shape, segs, mesh, n_dev) -> dict:
         model_shards=model_shards,
     )
     layout = stacked_lm_layout(shapes_tree, cfg.n_stages, model_shards=model_shards)
+    if comm_fit is not None:
+        ar_model = MeasuredComm(
+            sizes_bytes=tuple(comm_fit["sizes_bytes"]),
+            times_s=tuple(comm_fit["times_s"]),
+            axes=tuple(comm_fit.get("axes", ("data",))),
+        ).fit()
+        comm_source = "measured_comm"
+    else:
+        ar_model = tpu_psum_model(dp_axes)
+        comm_source = "analytic"
     plan = build_plan(
-        layout, costs, tpu_psum_model(dp_axes),
+        layout, costs, ar_model,
         policy="mg_wfbp", n_scan_stages=cfg.n_stages,
-        provenance={"arch": cfg.name},
+        provenance={"arch": cfg.name, "comm_source": comm_source},
     )
     out = {"analytic": plan.to_json_dict()}
+    out["arena"] = [
+        {"nbytes": a.nbytes, "n_slots": len(a.slots)}
+        for a in plan.group_arenas(shapes_tree)
+    ]
     if segs:
         # Segment roofline time covers fwd+bwd of a train segment; split
         # it 1/3 fwd + 2/3 bwd (the 2:4 flops ratio of Eq. 17/18).
@@ -368,8 +386,13 @@ def main() -> None:
                     help="decode/prefill param sharding override")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--skip-segments", action="store_true")
+    ap.add_argument("--comm-fit", default=None,
+                    help="JSON file with a serialized MeasuredComm sweep "
+                         "({sizes_bytes, times_s[, axes]}); plan records use "
+                         "its α–β fit instead of the analytic TPU model")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    comm_fit = json.loads(pathlib.Path(args.comm_fit).read_text()) if args.comm_fit else None
 
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     cells = []
@@ -409,6 +432,7 @@ def main() -> None:
                     n_microbatches=args.microbatches,
                     skip_segments=args.skip_segments,
                     overrides=overrides or None,
+                    comm_fit=comm_fit,
                 )
                 out = pathlib.Path(args.out) if args.out else RESULTS_DIR / f"{tag}.json"
                 out.write_text(json.dumps(rec, indent=1))

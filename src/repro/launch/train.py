@@ -14,10 +14,15 @@ Planning lifecycle wiring (journal MG-WFBP's online re-planning):
     calibrates a ``MeasuredCosts`` vector and ``replan_if_drifted``
     decides whether the policy reruns (threshold ``--replan-threshold``);
     a re-plan rebuilds the train step (scan segmentation changed);
-  * fault-tolerant restarts re-enter planning through the
-    ``resilient_loop`` ``on_restart`` hook — same pipeline, current N;
-  * ``--plan-out`` serializes the final plan for elastic restarts,
-    dry-runs, and benchmarks to reuse.
+  * fault-tolerant restarts restore the plan saved beside the latest
+    checkpoint (every checkpoint carries the active plan JSON —
+    ``--plan-out`` made automatic) or re-enter planning when none is
+    stored, through the ``resilient_loop`` hooks;
+  * ``--plan-out`` additionally serializes the final plan for elastic
+    restarts, dry-runs, and benchmarks to reuse;
+  * ``--fuse arena`` ships gradients over the packed-arena wire path
+    (kernels/comm_pack) and ``--measure-comm`` replaces the analytic
+    α–β model with a live timed-psum fit (``MeasuredComm``).
 """
 
 from __future__ import annotations
@@ -30,7 +35,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..checkpoint import AsyncCheckpointer, latest_step, restore
+from ..checkpoint import AsyncCheckpointer, latest_step, load_plan, restore
 from ..compat import set_mesh
 from ..configs import ARCH_NAMES, get_config, get_reduced
 from ..core import tpu_psum_model
@@ -41,7 +46,7 @@ from ..launch.mesh import make_mesh
 from ..launch.specs import param_specs
 from ..models.transformer import init_params
 from ..optim import make_optimizer
-from ..planning import MeasuredCosts, Plan, available_policies
+from ..planning import MeasuredComm, MeasuredCosts, Plan, available_policies
 from ..runtime import RunState, StragglerMonitor, resilient_loop
 
 
@@ -60,8 +65,18 @@ def main() -> None:
                     help="scheduler policy (planning registry; default mg_wfbp). "
                          "With --plan-in, only valid if it matches the plan's policy.")
     ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--fuse", default="concat",
+                    choices=["concat", "variadic", "arena"],
+                    help="wire layout: concat (one flat buffer, copy each way), "
+                         "variadic (zero-copy tuple psum), arena (packed flat "
+                         "buffer via kernels/comm_pack — one all-reduce per "
+                         "group AND no concatenate copies)")
     ap.add_argument("--virtual-dp", type=int, default=32,
                     help="DP size assumed by the α–β schedule model")
+    ap.add_argument("--measure-comm", action="store_true",
+                    help="fit (α, β) from timed psums on the live mesh "
+                         "(MeasuredComm, journal §V-A) instead of the "
+                         "analytic --virtual-dp TPU model")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--max-restarts", type=int, default=5)
@@ -84,14 +99,21 @@ def main() -> None:
     sync_cfg = SyncConfig(
         comm_dtype=jnp.bfloat16 if args.comm_dtype == "bf16" else jnp.float32,
         compression="bf16" if args.comm_dtype == "bf16" else None,
+        fuse=args.fuse,
     )
+
+    if args.measure_comm:
+        ar_model = MeasuredComm.time_psums(mesh, ("data",)).fit()
+        print(f"[train] measured comm fit: α={ar_model.a:.3e}s β={ar_model.b:.3e}s/B")
+    else:
+        ar_model = tpu_psum_model({"data": args.virtual_dp})
 
     def build_engine(plan: Plan | None = None) -> MGWFBPEngine:
         return MGWFBPEngine.build(
             cfg,
             param_specs(cfg),
             dp_axes=("data",),
-            ar_model=tpu_psum_model({"data": args.virtual_dp}),
+            ar_model=ar_model,
             tokens_per_device=args.batch * args.seq // n_dev,
             # a loaded plan carries its own policy; an explicitly requested
             # one is forwarded so the engine can reject a mismatch instead
@@ -164,12 +186,25 @@ def main() -> None:
                         restarts=state.restarts)
 
     def on_restart(state: RunState) -> RunState:
-        # Elastic restart: the surviving cluster re-enters planning — the
-        # plan is a pure function of (arch, mesh, α–β), never checkpointed.
-        state_box["eng"] = build_engine()
+        # Same-shape restart: resume under the exact plan the checkpoint
+        # was trained with (saved beside the weights); elastic restarts
+        # (no stored plan / different N) re-enter planning instead.
+        plan = None
+        ck = latest_step(args.ckpt_dir)
+        if ck is not None:
+            try:
+                plan = load_plan(args.ckpt_dir, ck)
+                if plan is not None:
+                    state_box["eng"] = build_engine(plan)
+            except Exception as e:  # corrupt/foreign/mismatched plan -> re-plan
+                print(f"[train] stored plan unusable ({e}); re-planning")
+                plan = None
+        if plan is None:
+            state_box["eng"] = build_engine()
         state_box["step_fn"] = state_box["eng"].make_train_step(opt, mesh, lr=args.lr)
         step_times.clear()
-        print(f"[train] restart at step {state.step}: re-planned -> "
+        how = "restored plan" if plan is not None else "re-planned"
+        print(f"[train] restart at step {state.step}: {how} -> "
               f"{state_box['eng'].plan.schedule.describe()}")
         return state
 
@@ -183,6 +218,8 @@ def main() -> None:
         max_restarts=args.max_restarts,
         straggler=monitor,
         on_restart=on_restart,
+        # every checkpoint carries the live plan (--plan-out made automatic)
+        plan_provider=lambda: state_box["eng"].plan,
     )
     print(f"[train] done: {final.step} steps, {final.restarts} restarts, "
           f"{time.time() - t0:.1f}s, {monitor.remediations} straggler remediations")

@@ -11,15 +11,19 @@ Lifecycle (see README):
     ``optimal`` + future ones, one extensible interface.
   * ``plan``      — the frozen, JSON-serializable ``Plan`` artifact.
   * ``costs``     — ``AnalyticCosts`` (Eq. 18) and ``MeasuredCosts``
-    (wall-clock / HLO segments), plus ``replan_if_drifted``.
+    (wall-clock / HLO segments), plus ``replan_if_drifted``; on the comm
+    side ``MeasuredComm`` (timed-psum α–β fit, journal §V-A Fig. 5(b)).
 """
 
 from .costs import (
     AnalyticCosts,
     CostSource,
+    DEFAULT_COMM_SWEEP,
     MEASURED_HW,
+    MeasuredComm,
     MeasuredCosts,
     cost_drift,
+    measure_comm_models,
     replan_if_drifted,
 )
 from .plan import PLAN_FORMAT, Plan, build_plan
@@ -34,9 +38,12 @@ from .registry import (
 __all__ = [
     "AnalyticCosts",
     "CostSource",
+    "DEFAULT_COMM_SWEEP",
     "MEASURED_HW",
+    "MeasuredComm",
     "MeasuredCosts",
     "cost_drift",
+    "measure_comm_models",
     "replan_if_drifted",
     "PLAN_FORMAT",
     "Plan",

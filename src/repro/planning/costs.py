@@ -17,14 +17,26 @@ live cost measurement drifts from the vector a plan was built with, the
 same policy reruns on the measured vector and a successor plan is
 emitted.  The training loop and the fault-tolerant restart path both call
 it (see ``launch/train.py``).
+
+The *communication* side has the same analytic/measured split:
+``MeasuredComm`` times real psums over a size sweep and least-squares
+fits the (α, β) of Eq. 9 per mesh axis (journal §V-A Fig. 5(b), online)
+— the measured counterpart of ``core.comm_model``'s analytic
+``tpu_psum_model``.  Its ``fit()`` is an ordinary ``AllReduceModel``, so
+plans and every registered policy consume measured comm models
+transparently.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Protocol, runtime_checkable
 
+import numpy as np
+
 from ..core.bucketing import layer_buckets_for_scan
+from ..core.comm_model import AllReduceModel, fit_affine
 from ..core.cost_model import Hardware, LayerCost, TPU_V5E
 from .plan import Plan
 from .registry import build_schedule, resolve_policy_name
@@ -141,6 +153,97 @@ class MeasuredCosts:
         bwd = [unit_seconds.get(c.name, c.t_b(base_hw)) for c in base]
         fwd = [c.t_f(base_hw) for c in base]
         return cls.from_unit_times(base, bwd, fwd, name=name)
+
+
+#: Default psum size sweep: 4 KiB … 16 MiB in ×8 steps — small enough to
+#: expose α, large enough to pin β (the journal sweeps the same decades).
+DEFAULT_COMM_SWEEP = tuple(4 * 1024 * 8**i for i in range(6))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredComm:
+    """Measured (α, β) all-reduce model for one set of mesh axes.
+
+    Raw observations are kept (sizes in bytes, wall seconds) so the fit
+    is reproducible and re-fittable; ``fit()`` returns the affine
+    ``AllReduceModel`` every policy/plan already consumes.
+    """
+
+    sizes_bytes: tuple[int, ...]
+    times_s: tuple[float, ...]
+    axes: tuple[str, ...] = ("data",)
+    name: str = "measured_comm"
+
+    def fit(self) -> AllReduceModel:
+        return fit_affine(
+            self.sizes_bytes, self.times_s,
+            name=f"{self.name}[{'+'.join(self.axes)}]",
+        )
+
+    @classmethod
+    def time_psums(
+        cls,
+        mesh,
+        axes: tuple[str, ...] = ("data",),
+        sizes_bytes: tuple[int, ...] = DEFAULT_COMM_SWEEP,
+        dtype=None,
+        repeats: int = 3,
+        name: str = "measured_comm",
+    ) -> "MeasuredComm":
+        """Time real psums over a size sweep on ``mesh``'s ``axes``.
+
+        One jitted ``shard_map`` psum per size; the first (compiling)
+        call is discarded and the min of ``repeats`` timed calls is kept
+        — the standard latency estimator, robust to scheduler noise.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from ..compat import shard_map
+
+        dtype = jnp.float32 if dtype is None else dtype
+        P = jax.sharding.PartitionSpec
+        axis_arg = axes if len(axes) > 1 else axes[0]
+        times = []
+        for nb in sizes_bytes:
+            n = max(1, int(nb) // np.dtype(dtype).itemsize)
+            x = jnp.ones((n,), dtype)
+
+            def body(v):
+                return jax.lax.psum(v, axis_arg)
+
+            f = jax.jit(
+                shard_map(
+                    body, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                    axis_names=set(axes), check_vma=False,
+                )
+            )
+            jax.block_until_ready(f(x))  # compile + warm
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(x))
+                best = min(best, time.perf_counter() - t0)
+            times.append(best)
+        return cls(
+            sizes_bytes=tuple(int(s) for s in sizes_bytes),
+            times_s=tuple(times), axes=tuple(axes), name=name,
+        )
+
+
+def measure_comm_models(
+    mesh, axes: tuple[str, ...] | None = None, **kwargs
+) -> dict[str, AllReduceModel]:
+    """Per-mesh-axis measured (α, β) fits — one ``MeasuredComm`` sweep
+    and fit per axis (plus every axis jointly when there are several,
+    under the ``'+'``-joined key), so hierarchical meshes get per-stage
+    measured constants the way ``TpuInterconnect.psum_model`` composes
+    analytic ones."""
+    axes = tuple(mesh.axis_names) if axes is None else tuple(axes)
+    out = {ax: MeasuredComm.time_psums(mesh, (ax,), **kwargs).fit() for ax in axes}
+    if len(axes) > 1:
+        out["+".join(axes)] = MeasuredComm.time_psums(mesh, axes, **kwargs).fit()
+    return out
 
 
 def cost_drift(plan: Plan, measured: CostSource) -> float:

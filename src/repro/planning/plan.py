@@ -22,7 +22,13 @@ import json
 import pathlib
 from typing import Any
 
-from ..core.bucketing import CommUnit, ParamLayout, layer_buckets_for_scan
+from ..core.bucketing import (
+    CommUnit,
+    GroupArena,
+    ParamLayout,
+    group_arenas,
+    layer_buckets_for_scan,
+)
 from ..core.comm_model import AllReduceModel
 from ..core.cost_model import Hardware, LayerCost, TPU_V5E
 from ..core.schedule import Schedule
@@ -76,6 +82,12 @@ class Plan:
             f"plan[{self.policy}|{src}|{self.hw.name}] "
             f"{self.schedule.describe()}"
         )
+
+    def group_arenas(self, shapes: Any, comm_dtype: Any = "float32") -> list[GroupArena]:
+        """Per-group flat wire layouts for this plan's schedule — what
+        ``fuse='arena'`` packs into (``shapes``: the parameter pytree or a
+        ``path -> shape`` callable; see ``bucketing.group_arenas``)."""
+        return group_arenas(self.layout, self.schedule, shapes, comm_dtype)
 
     # -- serialization ------------------------------------------------------
 

@@ -1,11 +1,19 @@
 from .fault_tolerance import RunState, StragglerMonitor, resilient_loop
-from .compression import ErrorFeedbackState, compressed_psum_rs_ag, ef_init
+from .compression import (
+    ErrorFeedbackState,
+    bf16_ef_decode,
+    bf16_ef_encode,
+    compressed_psum_rs_ag,
+    ef_init,
+)
 
 __all__ = [
     "RunState",
     "StragglerMonitor",
     "resilient_loop",
     "ErrorFeedbackState",
+    "bf16_ef_decode",
+    "bf16_ef_encode",
     "compressed_psum_rs_ag",
     "ef_init",
 ]

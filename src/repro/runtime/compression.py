@@ -4,7 +4,13 @@ Two honest wire formats (DESIGN.md §2 — a TPU psum cannot carry sub-16-bit
 payloads, so int8 uses a reduce-scatter + quantized all-gather split):
 
 * bf16 psum     — grads cast to bf16 on the wire (2x vs fp32); handled by
-  ``core.sync.SyncConfig(compression='bf16')``.
+  ``core.sync.SyncConfig(compression='bf16')``.  ``bf16_ef_encode`` is
+  the error-feedback variant: the rounding error of the cast stays in a
+  local f32 residual and is re-added next step, so the *expected* update
+  is unbiased.  ``core.sync``'s arena wire path
+  (``SyncConfig(fuse='arena', compression='bf16_ef')``) fuses exactly
+  this encode into the ``kernels/comm_pack`` pack kernel — these
+  functions are its semantics oracle.
 * int8 RS+AG    — ``compressed_psum_rs_ag``: reduce-scatter the fp grads
   (each device owns a 1/N shard of the sum), quantize the shard to int8
   with a per-shard fp32 scale, all-gather the int8 payload (4x smaller
@@ -40,6 +46,25 @@ def ef_init(grads_like: Pytree) -> ErrorFeedbackState:
     return ErrorFeedbackState(
         residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
     )
+
+
+def bf16_ef_encode(
+    g: jax.Array, residual: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback bf16 wire encode: ``(wire, new_residual)``.
+
+    ``wire = bf16(g + residual)`` and the new residual is what the cast
+    dropped — the EF-SGD accumulate/quantize/carry step at fp32/bf16
+    granularity.  Reference semantics for the fused arena pack.
+    """
+    acc = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    wire = acc.astype(jnp.bfloat16)
+    return wire, acc - wire.astype(jnp.float32)
+
+
+def bf16_ef_decode(wire: jax.Array, dtype: Any, scale=1.0) -> jax.Array:
+    """Inverse of the wire encode with the DP averaging scale fused."""
+    return (wire.astype(jnp.float32) * scale).astype(dtype)
 
 
 def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -83,6 +83,7 @@ def resilient_loop(
     straggler: StragglerMonitor | None = None,
     on_straggler: Callable[[RunState], RunState] | None = None,
     on_restart: Callable[[RunState], RunState] | None = None,
+    plan_provider: Callable[[], Any] | None = None,
 ) -> RunState:
     """Checkpoint/restart training loop.
 
@@ -94,6 +95,12 @@ def resilient_loop(
     ``on_restart(state)`` runs after every restore (including restarts
     from scratch) — the elasticity hook where the launcher re-plans the
     gradient-merge schedule for the post-failure cluster shape.
+
+    ``plan_provider()`` returns the *currently active* ``planning.Plan``
+    (or None); it is called at every checkpoint so the plan JSON lands
+    beside the weights (``checkpoint.load_plan`` reads it back) — a
+    callable rather than a value because online re-planning swaps the
+    plan mid-run.
     """
     ckpt = AsyncCheckpointer(checkpoint_dir)
     state = init_state()
@@ -115,6 +122,7 @@ def resilient_loop(
                     state.step,
                     {"params": state.params, "opt_state": state.opt_state},
                     extra={"restarts": restarts},
+                    plan=plan_provider() if plan_provider is not None else None,
                 )
         except Exception:
             restarts += 1
