@@ -2,6 +2,7 @@ from .checkpoint import (
     AsyncCheckpointer,
     latest_step,
     load_plan,
+    load_tuner_state,
     restore,
     restore_rebucketed,
     save,
@@ -11,6 +12,7 @@ __all__ = [
     "AsyncCheckpointer",
     "latest_step",
     "load_plan",
+    "load_tuner_state",
     "restore",
     "restore_rebucketed",
     "save",

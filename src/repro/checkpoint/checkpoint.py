@@ -39,6 +39,7 @@ Pytree = Any
 
 _MANIFEST = "manifest.json"
 _PLAN = "plan.json"
+_TUNER = "tuner.json"
 
 
 def _flatten(tree: Pytree) -> tuple[list[tuple[str, np.ndarray]], Any]:
@@ -60,19 +61,35 @@ def _plan_text(plan: Any) -> str | None:
     return json.dumps(plan, indent=1)
 
 
+def _tuner_text(tuner: Any) -> str | None:
+    """Serialize tuner state: a ``planning.Tuner`` (via ``state_dict``),
+    a pre-serialized JSON string, or a JSON dict — duck-typed like the
+    plan so checkpointing stays planning-agnostic."""
+    if tuner is None:
+        return None
+    if isinstance(tuner, str):
+        return tuner
+    if hasattr(tuner, "state_dict"):
+        tuner = tuner.state_dict()
+    return json.dumps(tuner, indent=1)
+
+
 def save(
     directory: str | pathlib.Path,
     step: int,
     tree: Pytree,
     extra: dict | None = None,
     plan: Any | None = None,
+    tuner: Any | None = None,
 ) -> pathlib.Path:
     """Atomic synchronous save; returns the final path.
 
     ``plan`` (a ``planning.Plan``, its JSON dict, or its JSON text) is
     written as ``plan.json`` inside the step directory under the same
     atomic rename — a checkpoint is complete with the schedule it was
-    trained under."""
+    trained under.  ``tuner`` (a ``planning.Tuner``, its ``state_dict``,
+    or JSON text) lands beside it as ``tuner.json`` so the auto-tuner's
+    sweep history and comm observations survive restarts too."""
     directory = pathlib.Path(directory)
     final = directory / f"step_{step:08d}"
     tmp = directory / f"step_{step:08d}.tmp"
@@ -92,6 +109,9 @@ def save(
     plan_text = _plan_text(plan)
     if plan_text is not None:
         (tmp / _PLAN).write_text(plan_text)
+    tuner_text = _tuner_text(tuner)
+    if tuner_text is not None:
+        (tmp / _TUNER).write_text(tuner_text)
     if final.exists():
         shutil.rmtree(final)
     tmp.rename(final)
@@ -107,6 +127,15 @@ def load_plan(directory: str | pathlib.Path, step: int):
     from ..planning import Plan
 
     return Plan.from_json(path.read_text())
+
+
+def load_tuner_state(directory: str | pathlib.Path, step: int) -> dict | None:
+    """The tuner state dict stored beside checkpoint ``step`` (None when
+    the run was not auto-tuned); feed it to ``planning.Tuner.load_state``."""
+    path = pathlib.Path(directory) / f"step_{step:08d}" / _TUNER
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
 
 
 def latest_step(directory: str | pathlib.Path) -> int | None:
@@ -164,18 +193,25 @@ class AsyncCheckpointer:
         self._error: BaseException | None = None
 
     def save(
-        self, step: int, tree: Pytree, extra: dict | None = None, plan: Any | None = None
+        self,
+        step: int,
+        tree: Pytree,
+        extra: dict | None = None,
+        plan: Any | None = None,
+        tuner: Any | None = None,
     ) -> None:
         self.wait()
         # snapshot to host memory synchronously (cheap vs serialization);
-        # the plan is serialized now too, so a re-plan after this call
-        # cannot race the background write
+        # the plan and tuner state are serialized now too, so a re-plan or
+        # a new sweep after this call cannot race the background write
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         plan_text = _plan_text(plan)
+        tuner_text = _tuner_text(tuner)
 
         def work():
             try:
-                save(self.directory, step, host_tree, extra, plan=plan_text)
+                save(self.directory, step, host_tree, extra,
+                     plan=plan_text, tuner=tuner_text)
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 

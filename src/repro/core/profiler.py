@@ -247,3 +247,24 @@ def segment_cost(name: str, compiled) -> SegmentCost:
         collectives=parse_collectives(compiled.as_text()),
         peak_temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
     )
+
+
+def time_segment(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Wall-clock one jitted/compiled segment: discard ``warmup`` calls
+    (compilation, caches), keep the min of ``repeats`` timed calls — the
+    same latency estimator ``MeasuredComm.time_psums`` uses, so compute-
+    and comm-side measured costs are directly comparable.  This is the
+    measured counterpart of ``segment_cost``: same segment decomposition,
+    seconds instead of flops."""
+    import time as _time
+
+    import jax
+
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, _time.perf_counter() - t0)
+    return best

@@ -66,6 +66,7 @@ from ..kernels.comm_pack import pack_arena, unpack_arena
 from .bucketing import (
     ParamLayout,
     WireEntry,
+    bucket_assignment,
     group_arenas,
     tree_get as _get,
     tree_set as _set,
@@ -138,6 +139,16 @@ def make_gradient_sync(
         raise ValueError("error-feedback compression requires fuse='arena'")
     group_entries = wire_entries(layout, schedule)
     stateful = config.compression == "bf16_ef"
+    # (lo, hi) layer spans in backward issue order — names the profiler
+    # scopes below and lets the timeline layer know what group i is.
+    group_spans = tuple(reversed(schedule.groups))
+    # Per-group wire payload (per device): CommUnit.grad_bytes already
+    # carries the model-shard division and the wire dtype the layout was
+    # built with — the same "p" vector the schedule was optimized over.
+    group_wire_bytes = tuple(
+        sum(u.grad_bytes for u in units)
+        for units in reversed(bucket_assignment(layout, schedule))
+    )
 
     def sync(grads: Pytree, residual: Pytree | None = None):
         if stateful and residual is None:
@@ -148,41 +159,52 @@ def make_gradient_sync(
         out = grads
         res_out = residual
         # Issue groups in backward order (layer-L group first), matching the
-        # availability order the schedule was optimized for.
-        for entries in group_entries:
-            if config.fuse == "arena":
-                out, res_out = _arena_group(
-                    entries, grads, out, res_out, dp_axes, world, config
-                )
-                continue
-            vals, metas = [], []
-            for kind, path, ab in entries:
-                g = _get(grads, path)
-                if kind == "slice":
-                    g = g[ab[0] : ab[1]]
-                metas.append((kind, path, ab, g.dtype, g.shape))
-                vals.append(_encode(g, config))
-            if config.fuse == "concat":
-                flat = (
-                    jnp.concatenate([v.reshape(-1) for v in vals])
-                    if len(vals) > 1
-                    else vals[0].reshape(-1)
-                )
-                red = jax.lax.psum(flat, dp_axes)
-                parts, off = [], 0
-                for _, _, _, _, shp in metas:
-                    n = int(np.prod(shp)) if shp else 1
-                    parts.append(red[off : off + n].reshape(shp))
-                    off += n
-            else:
-                parts = list(jax.lax.psum(tuple(vals), dp_axes))
-            for (kind, path, ab, dt, _), r in zip(metas, parts):
-                r = r.astype(dt)
-                if config.average:
-                    r = (r.astype(jnp.float32) / world).astype(dt)
-                out = _write_back(out, kind, path, ab, r)
+        # availability order the schedule was optimized for.  Each group is
+        # wrapped in a named scope so device profiles (and the timeline
+        # layer's per-group comm attribution) see the schedule boundaries.
+        for gi, entries in enumerate(group_entries):
+            lo, hi = group_spans[gi]
+            with jax.named_scope(f"wfbp_group{gi}_l{lo}_{hi}"):
+                if config.fuse == "arena":
+                    out, res_out = _arena_group(
+                        entries, grads, out, res_out, dp_axes, world, config
+                    )
+                    continue
+                vals, metas = [], []
+                for kind, path, ab in entries:
+                    g = _get(grads, path)
+                    if kind == "slice":
+                        g = g[ab[0] : ab[1]]
+                    metas.append((kind, path, ab, g.dtype, g.shape))
+                    vals.append(_encode(g, config))
+                if config.fuse == "concat":
+                    flat = (
+                        jnp.concatenate([v.reshape(-1) for v in vals])
+                        if len(vals) > 1
+                        else vals[0].reshape(-1)
+                    )
+                    red = jax.lax.psum(flat, dp_axes)
+                    parts, off = [], 0
+                    for _, _, _, _, shp in metas:
+                        n = int(np.prod(shp)) if shp else 1
+                        parts.append(red[off : off + n].reshape(shp))
+                        off += n
+                else:
+                    parts = list(jax.lax.psum(tuple(vals), dp_axes))
+                for (kind, path, ab, dt, _), r in zip(metas, parts):
+                    r = r.astype(dt)
+                    if config.average:
+                        r = (r.astype(jnp.float32) / world).astype(dt)
+                    out = _write_back(out, kind, path, ab, r)
         return (out, res_out) if stateful else out
 
+    # Metadata for the instrumentation layer (runtime/timeline.py): the
+    # per-group wire payloads, in the same backward issue order the groups
+    # execute in — what time_group_comm probes one psum per.
+    sync.schedule = schedule
+    sync.group_spans = group_spans
+    sync.group_wire_bytes = group_wire_bytes
+    sync.stateful = stateful
     return sync
 
 

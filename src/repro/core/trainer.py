@@ -137,6 +137,34 @@ class MGWFBPEngine:
     def segments(self) -> tuple[tuple[int, int], ...]:
         return self.plan.segments
 
+    @property
+    def stateful(self) -> bool:
+        """True when the sync carries error-feedback state: the train step
+        then takes and returns the residual pytree."""
+        return self.sync_config.compression == "bf16_ef"
+
+    def dp_world(self, mesh) -> int:
+        return int(np.prod([mesh.shape[ax] for ax in self.dp_axes]))
+
+    def init_residual(self, params: Pytree, mesh=None) -> Pytree | None:
+        """Zero f32 error-feedback residual (``compression='bf16_ef'``),
+        None for stateless compression.
+
+        The residual is *per-device* state (each device carries the
+        quantization error of its own local gradient contribution), so
+        every leaf gets a leading DP axis of the mesh's data-parallel
+        world size — sharded over ``dp_axes`` through the train step and
+        stored whole in checkpoints (a restart at a different world size
+        fails the shape check and re-initializes, like any elastic
+        restart).  ``mesh=None`` means world size 1.
+        """
+        if not self.stateful:
+            return None
+        world = self.dp_world(mesh) if mesh is not None else 1
+        return jax.tree.map(
+            lambda x: jnp.zeros((world, *x.shape), jnp.float32), params
+        )
+
     @classmethod
     def build(
         cls,
@@ -238,25 +266,63 @@ class MGWFBPEngine:
         return self.with_plan(new_plan), True
 
     def make_train_step(self, optimizer: Optimizer, mesh, *, lr: float = 3e-4):
-        """Shard-map train step: manual DP axes, auto model axis."""
+        """Shard-map train step: manual DP axes, auto model axis.
+
+        Stateless sync: ``step(params, opt_state, batch) -> (params,
+        opt_state, metrics)``.  With ``compression='bf16_ef'`` the
+        error-feedback residual threads through: ``step(params, opt_state,
+        residual, batch) -> (params, opt_state, residual, metrics)`` —
+        seed it with ``init_residual(params, mesh)`` and checkpoint it
+        beside the optimizer state so EF survives restarts.  The residual
+        is per-device state: its leaves carry a leading DP axis sharded
+        over ``dp_axes`` (each device reads and writes only its own
+        slice), never falsely claimed replicated.
+        """
         cfg = self.cfg
         P = jax.sharding.PartitionSpec
-
-        def body(params, opt_state, batch):
-            def loss(p):
-                return loss_fn(p, batch, cfg, segments=self.segments)
-
-            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
-            grads = self.sync(grads)
-            new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
-            l = jax.lax.pmean(l, self.dp_axes)
-            return new_params, new_opt, {"loss": l}
 
         batch_spec = {"targets": P(self.dp_axes, None)}
         if cfg.input_mode == "embeds":
             batch_spec["embeds"] = P(self.dp_axes, None, None)
         else:
             batch_spec["tokens"] = P(self.dp_axes, None)
+
+        def grads_and_loss(params, batch):
+            def loss(p):
+                return loss_fn(p, batch, cfg, segments=self.segments)
+
+            return jax.value_and_grad(loss, has_aux=True)(params)
+
+        if self.stateful:
+            # residual leaves carry a leading DP axis; inside the manual
+            # region each device sees its own (1, ...) slice
+            res_spec = P(self.dp_axes)
+
+            def body_ef(params, opt_state, residual, batch):
+                (l, metrics), grads = grads_and_loss(params, batch)
+                local_res = jax.tree.map(lambda r: r[0], residual)
+                grads, new_res = self.sync(grads, local_res)
+                new_residual = jax.tree.map(lambda r: r[None], new_res)
+                new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+                l = jax.lax.pmean(l, self.dp_axes)
+                return new_params, new_opt, new_residual, {"loss": l}
+
+            smapped = shard_map(
+                body_ef,
+                mesh=mesh,
+                in_specs=(P(), P(), res_spec, batch_spec),
+                out_specs=(P(), P(), res_spec, P()),
+                axis_names=set(self.dp_axes),
+                check_vma=False,
+            )
+            return jax.jit(smapped, donate_argnums=(0, 1, 2))
+
+        def body(params, opt_state, batch):
+            (l, metrics), grads = grads_and_loss(params, batch)
+            grads = self.sync(grads)
+            new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+            l = jax.lax.pmean(l, self.dp_axes)
+            return new_params, new_opt, {"loss": l}
 
         smapped = shard_map(
             body,

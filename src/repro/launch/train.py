@@ -10,32 +10,39 @@ On a real TPU slice the same entry point runs under `jax.distributed`
 Planning lifecycle wiring (journal MG-WFBP's online re-planning):
 
   * the engine builds (or loads, ``--plan-in``) a frozen ``Plan``;
-  * every ``--replan-every`` steps the measured median step time
-    calibrates a ``MeasuredCosts`` vector and ``replan_if_drifted``
-    decides whether the policy reruns (threshold ``--replan-threshold``);
-    a re-plan rebuilds the train step (scan segmentation changed);
-  * fault-tolerant restarts restore the plan saved beside the latest
-    checkpoint (every checkpoint carries the active plan JSON —
-    ``--plan-out`` made automatic) or re-enter planning when none is
-    stored, through the ``resilient_loop`` hooks;
+  * ``--autotune`` closes the loop: per-unit segment probes
+    (``runtime/timeline.py``) feed ``MeasuredCosts.from_segment_times``
+    and a registry-wide ``planning.Tuner`` sweep picks the argmin
+    predicted-t_iter plan — at startup, on drift, and on restart;
+  * every ``--replan-every`` steps the measured profile (per-unit probe
+    times under --autotune, else the median step time's uniform rescale)
+    drives ``replan_if_drifted`` / a tuner sweep (threshold
+    ``--replan-threshold``); a re-plan rebuilds the train step;
+  * every ``--comm-refit-every`` steps a slim timed-psum sweep is
+    exponentially weighted into the (α, β) fit (``CommRefitter``); when
+    the fitted constants drift past ``--comm-drift-threshold`` the plan
+    search reruns under the fresh comm model — the journal version's
+    online comm loop;
+  * fault-tolerant restarts restore the plan AND the tuner state saved
+    beside the latest checkpoint, or re-enter the plan search when none
+    is stored, through the ``resilient_loop`` hooks;
   * ``--plan-out`` additionally serializes the final plan for elastic
     restarts, dry-runs, and benchmarks to reuse;
-  * ``--fuse arena`` ships gradients over the packed-arena wire path
-    (kernels/comm_pack) and ``--measure-comm`` replaces the analytic
-    α–β model with a live timed-psum fit (``MeasuredComm``).
+  * ``--fuse arena`` ships gradients over the packed-arena wire path and
+    ``--compression bf16_ef`` threads the error-feedback residual through
+    the train step and checkpoints (EF survives restarts).
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import statistics
 import time
 
 import jax
 import jax.numpy as jnp
 
-from ..checkpoint import AsyncCheckpointer, latest_step, load_plan, restore
+from ..checkpoint import latest_step, load_plan, load_tuner_state
 from ..compat import set_mesh
 from ..configs import ARCH_NAMES, get_config, get_reduced
 from ..core import tpu_psum_model
@@ -46,8 +53,19 @@ from ..launch.mesh import make_mesh
 from ..launch.specs import param_specs
 from ..models.transformer import init_params
 from ..optim import make_optimizer
-from ..planning import MeasuredComm, MeasuredCosts, Plan, available_policies
-from ..runtime import RunState, StragglerMonitor, resilient_loop
+from ..planning import (
+    CommRefitter,
+    DEFAULT_COMM_SWEEP,
+    MeasuredComm,
+    MeasuredCosts,
+    Plan,
+    Tuner,
+    available_policies,
+    cost_drift,
+    psum_time_fn,
+)
+from ..runtime import RunState, StragglerMonitor, StepTimer, resilient_loop
+from ..runtime.timeline import make_unit_probes, probe_unit_times
 
 
 def main() -> None:
@@ -63,8 +81,14 @@ def main() -> None:
     ap.add_argument("--policy", "--method", dest="policy", default=None,
                     choices=list(available_policies()),
                     help="scheduler policy (planning registry; default mg_wfbp). "
-                         "With --plan-in, only valid if it matches the plan's policy.")
+                         "With --plan-in, only valid if it matches the plan's policy; "
+                         "ignored under --autotune (the sweep picks).")
     ap.add_argument("--comm-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--compression", default=None,
+                    choices=["bf16", "bf16_ef"],
+                    help="wire compression (default: follows --comm-dtype). "
+                         "bf16_ef carries the error-feedback residual through "
+                         "the train step and checkpoints (requires --fuse arena)")
     ap.add_argument("--fuse", default="concat",
                     choices=["concat", "variadic", "arena"],
                     help="wire layout: concat (one flat buffer, copy each way), "
@@ -77,6 +101,16 @@ def main() -> None:
                     help="fit (α, β) from timed psums on the live mesh "
                          "(MeasuredComm, journal §V-A) instead of the "
                          "analytic --virtual-dp TPU model")
+    ap.add_argument("--autotune", action="store_true",
+                    help="closed-loop auto-tuner: per-unit segment probes feed "
+                         "MeasuredCosts, and a registry-wide Tuner sweep picks "
+                         "the argmin predicted-t_iter plan at startup, on "
+                         "drift, and on restart")
+    ap.add_argument("--comm-refit-every", type=int, default=0,
+                    help="steps between slim timed-psum (α, β) re-fits "
+                         "(EWMA into the stored sweep; 0 = off)")
+    ap.add_argument("--comm-drift-threshold", type=float, default=0.25,
+                    help="relative (α, β) drift that triggers a comm re-plan")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--max-restarts", type=int, default=5)
@@ -89,6 +123,10 @@ def main() -> None:
     ap.add_argument("--replan-threshold", type=float, default=0.25,
                     help="relative per-unit backward-time drift that triggers a re-plan")
     args = ap.parse_args()
+    if args.plan_in and args.autotune:
+        ap.error("--plan-in and --autotune are mutually exclusive: the "
+                 "tuner's sweep picks the plan (drop --autotune to pin a "
+                 "serialized plan)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if args.reduced:
@@ -96,19 +134,32 @@ def main() -> None:
     n_dev = jax.device_count()
     mesh = make_mesh((n_dev, 1), ("data", "model"))
 
+    compression = args.compression
+    if compression is None and args.comm_dtype == "bf16":
+        compression = "bf16"
+    if compression == "bf16_ef" and args.fuse != "arena":
+        ap.error("--compression bf16_ef requires --fuse arena")
     sync_cfg = SyncConfig(
         comm_dtype=jnp.bfloat16 if args.comm_dtype == "bf16" else jnp.float32,
-        compression="bf16" if args.comm_dtype == "bf16" else None,
+        compression=compression,
         fuse=args.fuse,
     )
 
     if args.measure_comm:
-        ar_model = MeasuredComm.time_psums(mesh, ("data",)).fit()
+        comm_obs = MeasuredComm.time_psums(mesh, ("data",))
+        ar_model = comm_obs.fit()
         print(f"[train] measured comm fit: α={ar_model.a:.3e}s β={ar_model.b:.3e}s/B")
     else:
         ar_model = tpu_psum_model({"data": args.virtual_dp})
+        # analytic prior sampled on the standard sweep, so the online
+        # EWMA re-fit has observations to blend fresh probes into
+        comm_obs = MeasuredComm(
+            sizes_bytes=DEFAULT_COMM_SWEEP,
+            times_s=tuple(ar_model(s) for s in DEFAULT_COMM_SWEEP),
+            name="analytic_prior",
+        )
 
-    def build_engine(plan: Plan | None = None) -> MGWFBPEngine:
+    def build_engine(plan: Plan | None = None, from_tuner: bool = False) -> MGWFBPEngine:
         return MGWFBPEngine.build(
             cfg,
             param_specs(cfg),
@@ -117,19 +168,18 @@ def main() -> None:
             tokens_per_device=args.batch * args.seq // n_dev,
             # a loaded plan carries its own policy; an explicitly requested
             # one is forwarded so the engine can reject a mismatch instead
-            # of silently losing it
-            policy=args.policy if plan is not None else (args.policy or "mg_wfbp"),
+            # of silently losing it.  Tuner-chosen plans own their policy.
+            policy=(None if from_tuner else args.policy)
+            if plan is not None
+            else (args.policy or "mg_wfbp"),
             sync_config=sync_cfg,
             plan=plan,
         )
 
     plan_in = Plan.load(args.plan_in) if args.plan_in else None
     state_box = {"eng": build_engine(plan_in)}
-    print(f"[train] {state_box['eng'].plan.describe()}")
-    print(f"[train] scan segments: {state_box['eng'].segments}")
 
     opt = make_optimizer(args.optimizer)
-    state_box["step_fn"] = state_box["eng"].make_train_step(opt, mesh, lr=args.lr)
     data = make_stream(
         DataConfig(
             vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
@@ -137,76 +187,214 @@ def main() -> None:
         )
     )
     monitor = StragglerMonitor()
-    step_times: list[float] = []
+    timer = StepTimer(window=max(8, args.replan_every or 8))
+
+    def make_step(eng: MGWFBPEngine):
+        return eng.make_train_step(opt, mesh, lr=args.lr)
+
+    tuner: Tuner | None = None
+    if args.autotune:
+        tuner = Tuner(
+            layout=state_box["eng"].plan.layout,
+            n_scan_stages=cfg.n_stages,
+            shapes=param_specs(cfg),
+            wire_dtype=jnp.dtype(sync_cfg.wire_dtype).name,
+            provenance={"arch": cfg.name},
+        )
+        # probe inputs are only materialized (and their jitted probes only
+        # built) when the tuner actually needs them — a plain run must not
+        # pin a second copy of the parameters
+        probe_batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+        probe_params = init_params(jax.random.PRNGKey(0), cfg)
+        state_box["probes"] = make_unit_probes(cfg, probe_params, probe_batch)
+    if args.comm_refit_every:
+        state_box["refitter"] = CommRefitter(
+            base=comm_obs, threshold=args.comm_drift_threshold,
+        )
+        state_box["psum_time"] = psum_time_fn(mesh, ("data",))
+
+    def measured_unit_costs() -> MeasuredCosts:
+        """Per-unit probe times -> measured cost vector (non-uniform drift,
+        unlike the whole-step rescale)."""
+        eng = state_box["eng"]
+        profile = probe_unit_times(
+            cfg, probe_params, probe_batch, eng.plan.layout,
+            probes=state_box["probes"],
+        )
+        return MeasuredCosts.from_segment_times(
+            list(eng.plan.costs), eng.plan.hw, profile.unit_seconds,
+            name="probe_segments",
+        )
+
+    def adopt_plan(plan: Plan, why: str) -> None:
+        state_box["eng"] = build_engine(plan, from_tuner=True)
+        state_box["step_fn"] = make_step(state_box["eng"])
+        timer.reset()
+        print(f"[train] {why} -> {state_box['eng'].plan.describe()}")
+
+    def tuner_sweep(costs: MeasuredCosts, model, comm_source: str, trigger: str) -> Plan:
+        assert tuner is not None
+        return tuner.sweep(
+            costs.layer_costs(), model, costs.hw,
+            cost_source=costs.name, comm_source=comm_source, trigger=trigger,
+        )
+
+    if args.autotune:
+        measured = measured_unit_costs()
+        plan = tuner_sweep(
+            measured, ar_model,
+            "measured" if args.measure_comm else "analytic", "startup",
+        )
+        adopt_plan(plan, "autotune startup sweep "
+                         f"({tuner.last_record.chosen}, "
+                         f"{len(tuner.last_record.candidates)} candidates)")
+    else:
+        state_box["step_fn"] = make_step(state_box["eng"])
+        print(f"[train] {state_box['eng'].plan.describe()}")
+    print(f"[train] scan segments: {state_box['eng'].segments}")
 
     def init_state() -> RunState:
         params = init_params(jax.random.PRNGKey(0), cfg)
-        return RunState(step=0, params=params, opt_state=opt.init(params))
+        return RunState(
+            step=0, params=params, opt_state=opt.init(params),
+            residual=state_box["eng"].init_residual(params, mesh),
+        )
 
     def maybe_replan(step: int) -> None:
         """Measured-profile drift check (journal MG-WFBP online re-plan)."""
         eng = state_box["eng"]
         modeled = eng.plan.schedule.result
-        if modeled is None or len(step_times) < 5:
+        measured_t = timer.median()
+        if modeled is None or measured_t is None or len(timer) < 5:
             return
-        measured_t = statistics.median(step_times[-args.replan_every :])
+        if tuner is not None:
+            tuner.observe(measured_t)
+            measured = measured_unit_costs()
+            drift = cost_drift(eng.plan, measured)
+            if drift > args.replan_threshold:
+                plan = tuner_sweep(
+                    measured, eng.plan.ar_model,
+                    eng.plan.provenance.get("comm_source", "analytic"),
+                    "cost_drift",
+                )
+                adopt_plan(plan, f"step {step}: cost drift {drift:.3f} re-sweep")
+            return
         measured = MeasuredCosts.from_step_timing(
             list(eng.plan.costs), eng.plan.hw, measured_t, modeled.t_iter
         )
         new_eng, replanned = eng.replan(measured, threshold=args.replan_threshold)
         if replanned:
             state_box["eng"] = new_eng
-            state_box["step_fn"] = new_eng.make_train_step(opt, mesh, lr=args.lr)
+            state_box["step_fn"] = make_step(new_eng)
             # The rebuilt step recompiles and the old engine's samples no
             # longer describe the new segmentation — restart the window.
-            step_times.clear()
-            state_box["skip_samples"] = 2
+            timer.reset()
             print(f"[train] step {step}: re-planned "
                   f"(drift {new_eng.plan.provenance['drift']}) -> "
                   f"{new_eng.plan.schedule.describe()}")
 
+    def maybe_refit_comm(step: int) -> None:
+        """Amortized comm-side drift check: slim psum sweep -> EWMA ->
+        (α, β) re-fit -> re-plan past the threshold."""
+        refitter = state_box.get("refitter")
+        if refitter is None:
+            return
+        fit, drift, drifted = refitter.check(state_box["psum_time"])
+        if not drifted:
+            return
+        eng = state_box["eng"]
+        if tuner is not None:
+            plan = tuner_sweep(
+                MeasuredCosts(costs=tuple(eng.plan.costs), hw=eng.plan.hw,
+                              name=eng.plan.provenance.get("cost_source", "analytic")),
+                fit, "measured_comm_refit", "comm_drift",
+            )
+            adopt_plan(plan, f"step {step}: comm drift {drift:.3f} "
+                             f"(α={fit.a:.3e} β={fit.b:.3e}) re-sweep")
+        else:
+            new_plan, replanned = refitter.replan(eng.plan, fit)
+            if replanned:
+                adopt_plan(new_plan, f"step {step}: comm drift {drift:.3f} re-plan")
+
+    track_time = bool(args.replan_every or args.comm_refit_every or args.autotune)
+
     def do_step(state: RunState, step: int) -> RunState:
         batch = jax.tree.map(jnp.asarray, data.batch_at(step))
+        eng = state_box["eng"]
         t0 = time.monotonic()
         with set_mesh(mesh):
-            p, o, m = state_box["step_fn"](state.params, state.opt_state, batch)
-        if args.replan_every:
-            # timing needs a host-device sync; skip both when re-planning
-            # is off so the dispatch pipeline stays async
+            if eng.stateful:
+                p, o, res, m = state_box["step_fn"](
+                    state.params, state.opt_state, state.residual, batch
+                )
+            else:
+                p, o, m = state_box["step_fn"](state.params, state.opt_state, batch)
+                res = state.residual
+        if track_time:
+            # timing needs a host-device sync; skip both when every online
+            # check is off so the dispatch pipeline stays async
             jax.block_until_ready(p)
-            if step > 1 and not state_box.get("skip_samples"):  # skip compile steps
-                step_times.append(time.monotonic() - t0)
-            elif state_box.get("skip_samples"):
-                state_box["skip_samples"] -= 1
-            if step and step % args.replan_every == 0:
+            timer.observe(time.monotonic() - t0)
+            if args.replan_every and step and step % args.replan_every == 0:
                 maybe_replan(step)
+            if args.comm_refit_every and step and step % args.comm_refit_every == 0:
+                maybe_refit_comm(step)
         if step % 10 == 0:
             print(f"[train] step {step} loss {float(m['loss']):.4f}")
         return RunState(step=state.step, params=p, opt_state=o,
-                        restarts=state.restarts)
+                        restarts=state.restarts, residual=res)
 
     def on_restart(state: RunState) -> RunState:
         # Same-shape restart: resume under the exact plan the checkpoint
-        # was trained with (saved beside the weights); elastic restarts
-        # (no stored plan / different N) re-enter planning instead.
+        # was trained with (saved beside the weights), and under --autotune
+        # resume the tuner's sweep history too; elastic restarts (no stored
+        # plan / different N) re-enter the plan search instead.
         plan = None
+        how = "re-planned"
         ck = latest_step(args.ckpt_dir)
         if ck is not None:
             try:
                 plan = load_plan(args.ckpt_dir, ck)
                 if plan is not None:
-                    state_box["eng"] = build_engine(plan)
+                    state_box["eng"] = build_engine(plan, from_tuner=args.autotune)
+                    how = "restored plan"
             except Exception as e:  # corrupt/foreign/mismatched plan -> re-plan
                 print(f"[train] stored plan unusable ({e}); re-planning")
                 plan = None
+            if tuner is not None:
+                try:
+                    st = load_tuner_state(args.ckpt_dir, ck)
+                    if st is not None:
+                        tuner.load_state(st)
+                        if st.get("comm_refitter") and "refitter" in state_box:
+                            state_box["refitter"] = CommRefitter.from_state_dict(
+                                st["comm_refitter"]
+                            )
+                except Exception as e:
+                    print(f"[train] stored tuner state unusable ({e}); starting fresh")
         if plan is None:
-            state_box["eng"] = build_engine()
-        state_box["step_fn"] = state_box["eng"].make_train_step(opt, mesh, lr=args.lr)
-        step_times.clear()
-        how = "restored plan" if plan is not None else "re-planned"
+            if tuner is not None:
+                plan = tuner_sweep(
+                    measured_unit_costs(), ar_model,
+                    "measured" if args.measure_comm else "analytic", "restart",
+                )
+                state_box["eng"] = build_engine(plan, from_tuner=True)
+                how = "restart sweep"
+            else:
+                state_box["eng"] = build_engine()
+        state_box["step_fn"] = make_step(state_box["eng"])
+        timer.reset()
         print(f"[train] restart at step {state.step}: {how} -> "
               f"{state_box['eng'].plan.schedule.describe()}")
         return state
+
+    def tuner_state() -> dict:
+        """Checkpointed tuner state: sweep history + the comm refitter's
+        EWMA'd observations, so BOTH online loops resume after a restart."""
+        st = tuner.state_dict()
+        if state_box.get("refitter") is not None:
+            st["comm_refitter"] = state_box["refitter"].state_dict()
+        return st
 
     t0 = time.time()
     final = resilient_loop(
@@ -219,8 +407,16 @@ def main() -> None:
         straggler=monitor,
         on_restart=on_restart,
         # every checkpoint carries the live plan (--plan-out made automatic)
+        # and, when auto-tuning, the tuner's sweep history + comm observations
         plan_provider=lambda: state_box["eng"].plan,
+        tuner_provider=tuner_state if tuner is not None else None,
     )
+    if tuner is not None and timer.median() is not None and tuner.history:
+        rec = tuner.observe(timer.median())
+        print(f"[train] tuner: chosen={rec.chosen} "
+              f"predicted_t_iter={rec.predicted_t_iter:.3e}s "
+              f"observed_t_iter={rec.observed_t_iter:.3e}s "
+              f"over {len(rec.candidates)} candidates")
     print(f"[train] done: {final.step} steps, {final.restarts} restarts, "
           f"{time.time() - t0:.1f}s, {monitor.remediations} straggler remediations")
     if args.plan_out:

@@ -20,10 +20,13 @@ from .costs import (
     CostSource,
     DEFAULT_COMM_SWEEP,
     MEASURED_HW,
+    SLIM_COMM_SWEEP,
     MeasuredComm,
     MeasuredCosts,
+    comm_drift,
     cost_drift,
     measure_comm_models,
+    replan_if_comm_drifted,
     replan_if_drifted,
 )
 from .plan import PLAN_FORMAT, Plan, build_plan
@@ -34,16 +37,27 @@ from .registry import (
     register_policy,
     resolve_policy_name,
 )
+from .tuner import (
+    Candidate,
+    CommRefitter,
+    SweepRecord,
+    Tuner,
+    default_policies,
+    psum_time_fn,
+)
 
 __all__ = [
     "AnalyticCosts",
     "CostSource",
     "DEFAULT_COMM_SWEEP",
     "MEASURED_HW",
+    "SLIM_COMM_SWEEP",
     "MeasuredComm",
     "MeasuredCosts",
+    "comm_drift",
     "cost_drift",
     "measure_comm_models",
+    "replan_if_comm_drifted",
     "replan_if_drifted",
     "PLAN_FORMAT",
     "Plan",
@@ -53,4 +67,10 @@ __all__ = [
     "get_policy",
     "register_policy",
     "resolve_policy_name",
+    "Candidate",
+    "CommRefitter",
+    "SweepRecord",
+    "Tuner",
+    "default_policies",
+    "psum_time_fn",
 ]

@@ -159,6 +159,12 @@ class MeasuredCosts:
 #: expose α, large enough to pin β (the journal sweeps the same decades).
 DEFAULT_COMM_SWEEP = tuple(4 * 1024 * 8**i for i in range(6))
 
+#: Amortized re-fit sweep: one small, one mid, one large size.  Three
+#: timed psums per drift check keep the online comm monitor cheap while
+#: still moving both ends of the affine fit (α from the small size, β
+#: from the large one).
+SLIM_COMM_SWEEP = (DEFAULT_COMM_SWEEP[0], DEFAULT_COMM_SWEEP[2], DEFAULT_COMM_SWEEP[5])
+
 
 @dataclasses.dataclass(frozen=True)
 class MeasuredComm:
@@ -178,6 +184,34 @@ class MeasuredComm:
         return fit_affine(
             self.sizes_bytes, self.times_s,
             name=f"{self.name}[{'+'.join(self.axes)}]",
+        )
+
+    def update(
+        self,
+        sizes_bytes: tuple[int, ...] | list[int],
+        times_s: tuple[float, ...] | list[float],
+        weight: float = 0.5,
+    ) -> "MeasuredComm":
+        """Fold fresh observations into the sweep (returns a new record).
+
+        Re-observed sizes are exponentially weighted (``new = (1-w)·old +
+        w·fresh``) so a transient spike does not whiplash the (α, β) fit,
+        while sustained congestion converges in a few checks; unseen sizes
+        are appended.  This is the amortized online fit of the journal
+        version: a slim ``SLIM_COMM_SWEEP`` re-probe per check instead of
+        the full startup sweep.
+        """
+        if not 0.0 < weight <= 1.0:
+            raise ValueError(f"EWMA weight must be in (0, 1], got {weight}")
+        obs = dict(zip(self.sizes_bytes, self.times_s))
+        for s, t in zip(sizes_bytes, times_s):
+            s = int(s)
+            obs[s] = (1.0 - weight) * obs[s] + weight * float(t) if s in obs else float(t)
+        items = sorted(obs.items())
+        return dataclasses.replace(
+            self,
+            sizes_bytes=tuple(s for s, _ in items),
+            times_s=tuple(t for _, t in items),
         )
 
     @classmethod
@@ -304,6 +338,64 @@ def replan_if_drifted(
         plan,
         costs=tuple(costs),
         hw=measured.hw,
+        schedule=schedule,
+        segments=segments,
+        provenance=prov,
+    )
+    return new_plan, True
+
+
+def comm_drift(old: AllReduceModel, new: AllReduceModel) -> float:
+    """Max relative deviation of the fitted (α, β) pair vs a reference.
+
+    0.0 == identical constants; 9.0 == one of α/β moved ×10 (congestion,
+    a degraded link).  Denominators are floored so a near-zero reference
+    constant does not turn measurement noise into infinite drift.
+    """
+    da = abs(new.a - old.a) / max(abs(old.a), 1e-9)
+    db = abs(new.b - old.b) / max(abs(old.b), 1e-15)
+    return max(da, db)
+
+
+def replan_if_comm_drifted(
+    plan: Plan,
+    new_model: AllReduceModel,
+    threshold: float = 0.25,
+    policy: str | None = None,
+) -> tuple[Plan, bool]:
+    """The comm-side analogue of ``replan_if_drifted``: re-run the plan's
+    policy under a freshly fitted (α, β) model when it drifts past
+    ``threshold``; returns ``(plan, replanned)``.
+
+    The successor plan keeps the cost vector and layout, swaps in the
+    measured all-reduce model, and records the drift in provenance.  α is
+    the merge gain itself (Eq. 10), so a drifted α directly moves the
+    optimal merge set — this is what completes the journal version's
+    online loop (arXiv:1912.09268 Fig. 5(b)) for the wire side.
+    """
+    drift = comm_drift(plan.ar_model, new_model)
+    if drift <= threshold:
+        return plan, False
+    policy = resolve_policy_name(policy or plan.policy)
+    costs = list(plan.costs)
+    schedule = build_schedule(policy, costs, new_model, hw=plan.hw, **plan.policy_opts)
+    segments = (
+        layer_buckets_for_scan(schedule, plan.n_scan_stages)
+        if plan.n_scan_stages is not None
+        else None
+    )
+    prov = dict(plan.provenance)
+    prov.update(
+        {
+            "policy": policy,
+            "comm_source": new_model.name,
+            "replanned_from_comm": plan.ar_model.name,
+            "comm_drift": f"{drift:.4f}",
+        }
+    )
+    new_plan = dataclasses.replace(
+        plan,
+        ar_model=new_model,
         schedule=schedule,
         segments=segments,
         provenance=prov,

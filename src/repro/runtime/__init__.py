@@ -6,6 +6,13 @@ from .compression import (
     compressed_psum_rs_ag,
     ef_init,
 )
+from .timeline import (
+    StepTimer,
+    UnitProfile,
+    make_unit_probes,
+    probe_unit_times,
+    time_group_comm,
+)
 
 __all__ = [
     "RunState",
@@ -16,4 +23,9 @@ __all__ = [
     "bf16_ef_encode",
     "compressed_psum_rs_ag",
     "ef_init",
+    "StepTimer",
+    "UnitProfile",
+    "make_unit_probes",
+    "probe_unit_times",
+    "time_group_comm",
 ]

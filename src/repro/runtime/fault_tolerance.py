@@ -42,6 +42,16 @@ class RunState:
     params: Pytree
     opt_state: Pytree
     restarts: int = 0
+    #: error-feedback residual pytree (compression='bf16_ef'); None for
+    #: stateless runs.  Checkpointed beside params/opt_state so EF
+    #: compression survives restarts.
+    residual: Pytree | None = None
+
+    def checkpoint_tree(self) -> dict:
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        if self.residual is not None:
+            tree["residual"] = self.residual
+        return tree
 
 
 class StragglerMonitor:
@@ -84,6 +94,7 @@ def resilient_loop(
     on_straggler: Callable[[RunState], RunState] | None = None,
     on_restart: Callable[[RunState], RunState] | None = None,
     plan_provider: Callable[[], Any] | None = None,
+    tuner_provider: Callable[[], Any] | None = None,
 ) -> RunState:
     """Checkpoint/restart training loop.
 
@@ -100,7 +111,10 @@ def resilient_loop(
     (or None); it is called at every checkpoint so the plan JSON lands
     beside the weights (``checkpoint.load_plan`` reads it back) — a
     callable rather than a value because online re-planning swaps the
-    plan mid-run.
+    plan mid-run.  ``tuner_provider()`` is the same contract for the
+    auto-tuner's state (``checkpoint.load_tuner_state`` /
+    ``planning.Tuner.load_state``): sweep history and comm observations
+    resume across restarts instead of restarting the online loop cold.
     """
     ckpt = AsyncCheckpointer(checkpoint_dir)
     state = init_state()
@@ -120,9 +134,10 @@ def resilient_loop(
             if state.step % checkpoint_every == 0:
                 ckpt.save(
                     state.step,
-                    {"params": state.params, "opt_state": state.opt_state},
+                    state.checkpoint_tree(),
                     extra={"restarts": restarts},
                     plan=plan_provider() if plan_provider is not None else None,
+                    tuner=tuner_provider() if tuner_provider is not None else None,
                 )
         except Exception:
             restarts += 1
@@ -137,15 +152,13 @@ def resilient_loop(
                     state = on_restart(state)
                 continue
             fresh = init_state()
-            tree, extra = restore(
-                checkpoint_dir, step,
-                {"params": fresh.params, "opt_state": fresh.opt_state},
-            )
+            tree, extra = restore(checkpoint_dir, step, fresh.checkpoint_tree())
             state = RunState(
                 step=step,
                 params=tree["params"],
                 opt_state=tree["opt_state"],
                 restarts=restarts,
+                residual=tree.get("residual"),
             )
             if on_restart is not None:
                 state = on_restart(state)

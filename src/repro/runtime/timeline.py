@@ -1,0 +1,231 @@
+"""Per-unit step instrumentation: the live-loop side of measured costs.
+
+The paper seeds Algorithm 1 with per-layer backward times "benchmarked in
+the first several iterations"; the journal version re-derives them online.
+Until this module the train loop's only live signal was whole-step wall
+time — a uniform rescale of the analytic vector that can never move the
+*relative* unit costs the merge decision actually depends on.
+
+Two measurement paths, mirroring ``core/profiler.py``'s split:
+
+  * where compiled-HLO segment profiles exist (the dry-run pipeline),
+    ``profiler.time_segment`` wall-clocks those same compiled segments —
+    measured seconds over the exact segment decomposition;
+  * in the live loop, ``make_unit_probes`` builds one *jitted probe* per
+    distinct CommUnit kind (embed / one scan stage / tail / head) running
+    that unit's real forward+backward at the training shape, and
+    ``probe_unit_times`` times them (warmup discarded, min of repeats).
+    Structurally identical scan stages share one probe, so a probe pass
+    costs ~3–4 small jitted calls regardless of depth — cheap enough to
+    amortize into the drift-check cadence.
+
+``probe_unit_times`` feeds ``MeasuredCosts.from_segment_times`` directly:
+per-unit backward seconds under ``MEASURED_HW``, with genuinely
+non-uniform drift across units (embed's gather backward and the head's
+vocab matmul move very differently from a transformer stage when batch,
+sequence, or sharding change).
+
+The comm side rides the same cadence: ``time_group_comm`` times one real
+psum per schedule group's wire payload (``sync.group_wire_bytes``), and
+``StepTimer`` owns the whole-step samples (compile-step skipping included)
+that predicted-vs-observed provenance compares against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Any, Callable
+
+from ..core.profiler import time_segment
+
+Pytree = Any
+
+#: Probes time forward+backward together (``jax.grad`` runs both); the
+#: backward share of a train segment is 2/3 under the paper's 2:4
+#: fwd:bwd flops ratio (Eq. 17/18) — the same split the dry-run uses.
+BWD_FRACTION = 2.0 / 3.0
+
+
+@dataclasses.dataclass
+class UnitProfile:
+    """One probe pass: measured per-unit backward seconds (+ comm)."""
+
+    unit_seconds: dict[str, float]  # unit name -> backward seconds
+    group_seconds: tuple[float, ...] = ()  # per schedule group comm seconds
+    source: str = "probe"
+
+    def ratios(self, base_costs, hw) -> dict[str, float]:
+        """measured / analytic backward-time ratio per unit — the drift
+        signature.  A uniform whole-step rescale produces identical
+        ratios; real segment timing does not."""
+        out = {}
+        for c in base_costs:
+            if c.name in self.unit_seconds:
+                out[c.name] = self.unit_seconds[c.name] / max(c.t_b(hw), 1e-12)
+        return out
+
+    def nonuniformity(self, base_costs, hw) -> float:
+        """max/min of the per-unit ratios (1.0 == a pure uniform rescale)."""
+        r = list(self.ratios(base_costs, hw).values())
+        if not r:
+            return 1.0
+        return max(r) / max(min(r), 1e-12)
+
+
+def make_unit_probes(
+    cfg, params: Pytree, batch: dict, *,
+    positions=None,
+) -> dict[str, tuple[Callable, tuple]]:
+    """One jitted fwd+bwd probe per distinct unit kind.
+
+    Returns ``{kind: (jitted_fn, args)}`` with kinds ``embed``, ``stage``,
+    ``tail`` (when the arch has one) and ``head`` — the timed-shard-map
+    fallback for when no compiled-HLO segment profile exists.  Probes run
+    the unit's real computation (``models.transformer`` apply fns) on the
+    live batch shapes, so their wall times move with exactly the things
+    Eq. 18's analytic constants cannot see.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..models.layers import apply_norm, softcap_logits
+    from ..models.transformer import apply_stage
+
+    targets = batch["targets"]
+    B, S = targets.shape
+    x = jnp.ones((B, S, cfg.d_model), cfg.param_dtype)
+    if positions is None:
+        if cfg.attention and cfg.attention.rope == "mrope":
+            positions = jnp.broadcast_to(jnp.arange(S), (3, B, S))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    probes: dict[str, tuple[Callable, tuple]] = {}
+
+    if cfg.input_mode == "embeds":
+        # no lookup backward in this mode; the unit's cost is the input cast
+        def embed_loss(e):
+            return jnp.sum(e.astype(jnp.float32))
+
+        probes["embed"] = (jax.jit(jax.grad(embed_loss)), (batch["embeds"],))
+    else:
+        tokens = batch["tokens"]
+
+        def embed_loss(e):
+            return jnp.sum(e[tokens].astype(jnp.float32))
+
+        probes["embed"] = (jax.jit(jax.grad(embed_loss)), (params["embed"],))
+
+    def stage_probe(pattern):
+        def loss(sp, xx):
+            y, _, aux = apply_stage(sp, xx, cfg, pattern, positions=positions)
+            return jnp.sum(y.astype(jnp.float32)) + aux
+
+        return jax.jit(jax.grad(loss, argnums=(0, 1)))
+
+    stage_p = jax.tree.map(lambda a: a[0], params["stages"])
+    probes["stage"] = (stage_probe(cfg.pattern), (stage_p, x))
+    if cfg.tail_pattern and "tail" in params:
+        probes["tail"] = (stage_probe(cfg.tail_pattern), (params["tail"], x))
+
+    head_mat = params["embed"].T if cfg.tie_embeddings else params["head"]
+
+    def head_loss(norm_p, hm, xx):
+        y = apply_norm(cfg, norm_p, xx)
+        logits = (y @ hm.astype(cfg.param_dtype)).astype(jnp.float32)
+        logits = softcap_logits(logits, cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - ll)
+
+    probes["head"] = (
+        jax.jit(jax.grad(head_loss, argnums=(0, 1))),
+        (params["final_norm"], head_mat, x),
+    )
+    return probes
+
+
+def probe_unit_times(
+    cfg, params: Pytree, batch: dict, layout, *,
+    probes: dict[str, tuple[Callable, tuple]] | None = None,
+    repeats: int = 2, warmup: int = 1, bwd_fraction: float = BWD_FRACTION,
+) -> UnitProfile:
+    """Time the unit probes and expand to a per-CommUnit seconds map.
+
+    ``layout`` is the plan's ``ParamLayout``; every ``stage_i`` unit gets
+    the (single) stage probe's time — the stages are structurally
+    identical, so one measurement covers all of them while the embed /
+    tail / head units carry their own.  Ready to feed
+    ``MeasuredCosts.from_segment_times``.
+
+    Pass a prebuilt ``probes`` dict (``make_unit_probes``) when probing
+    repeatedly — the jit caches live on the probe callables, so reusing
+    them keeps every re-probe compile-free.
+    """
+    if probes is None:
+        probes = make_unit_probes(cfg, params, batch)
+    kind_seconds = {
+        kind: bwd_fraction * time_segment(fn, *args, warmup=warmup, repeats=repeats)
+        for kind, (fn, args) in probes.items()
+    }
+    unit_seconds: dict[str, float] = {}
+    for u in layout.units:
+        kind = "stage" if u.name.startswith("stage_") else u.name
+        if kind in kind_seconds:
+            unit_seconds[u.name] = kind_seconds[kind]
+    return UnitProfile(unit_seconds=unit_seconds, source="probe")
+
+
+def time_group_comm(
+    mesh, dp_axes: tuple[str, ...], group_nbytes, dtype=None, repeats: int = 2,
+) -> tuple[float, ...]:
+    """Seconds per schedule group's all-reduce: one timed psum per group
+    wire payload (``sync.group_wire_bytes``, backward issue order)."""
+    from ..planning.costs import MeasuredComm
+
+    sizes = tuple(max(1, int(n)) for n in group_nbytes)
+    mc = MeasuredComm.time_psums(
+        mesh, tuple(dp_axes), sizes_bytes=sizes, dtype=dtype,
+        repeats=repeats, name="group_comm",
+    )
+    return mc.times_s
+
+
+class StepTimer:
+    """Whole-step wall-time window with compile-step skipping.
+
+    The train loop calls ``skip(n)`` after anything that recompiles (a
+    re-plan, a restart) and ``observe(dt)`` per step; ``median()`` is the
+    observed t_iter that predicted-vs-observed provenance compares
+    against (``Tuner.observe``)."""
+
+    def __init__(self, window: int = 50, skip_first: int = 2):
+        self.window = window
+        self._samples: list[float] = []
+        self._skip = max(0, skip_first)
+
+    def skip(self, n: int = 2) -> None:
+        """Discard the next ``n`` samples (recompile ahead)."""
+        self._skip = max(self._skip, n)
+
+    def observe(self, dt: float) -> None:
+        if self._skip > 0:
+            self._skip -= 1
+            return
+        self._samples.append(float(dt))
+        if len(self._samples) > self.window:
+            del self._samples[: -self.window]
+
+    def reset(self, skip_first: int = 2) -> None:
+        self._samples.clear()
+        self._skip = max(0, skip_first)
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def median(self) -> float | None:
+        """Median observed step seconds (None before any clean sample)."""
+        if not self._samples:
+            return None
+        return statistics.median(self._samples)
