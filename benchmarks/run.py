@@ -262,6 +262,79 @@ def tuner() -> list[str]:
     return rows
 
 
+def fabric_sweep() -> list[str]:
+    """One registry, all backends: t_iter per fabric preset × arch, the
+    plan each fabric's (α, β) selects, and the decode-side serve plan —
+    written to ``benchmarks/results/BENCH_fabric.json``.
+
+    The sweep is load-bearing acceptance, not a report: every preset must
+    yield a valid plan (schedule covers all units, evaluated timeline),
+    and wherever a preset's startup cost is positive the merge gain of
+    Eq. 10 must be positive too (the gain IS ``a``) — asserted per cell,
+    and re-checked by the ``fabric-smoke`` CI job.
+    """
+    from repro.configs import get_reduced
+    from repro.core.cost_model import TPU_V5E
+    from repro.fabric import available_fabrics, get_fabric
+    from repro.launch.specs import param_specs
+    from repro.planning import Tuner, build_serve_plan
+
+    rows = ["table=fabric_sweep"]
+    records = []
+    axis_sizes = {"pod": 2, "data": 16}
+    serve_axis_sizes = {"model": 16}
+    for arch in ("tinyllama-1.1b", "mixtral-8x7b"):
+        layout, analytic, _, n_scan = _arch_sweep_inputs(arch)
+        serve_cfg = get_reduced(arch)
+        for preset in available_fabrics():
+            fab = get_fabric(preset)
+            ar = fab.cost("all_reduce", axis_sizes)
+            tuner = Tuner(layout=layout, n_scan_stages=n_scan)
+            plan = tuner.sweep_fabric(
+                analytic, fab, axis_sizes, TPU_V5E,
+                cost_source="analytic", trigger="fabric_bench",
+            )
+            rec_t = tuner.last_record
+            res = plan.schedule.result
+            assert res is not None and res.t_iter > 0, (preset, arch)
+            assert plan.schedule.groups[-1][1] == layout.num_layers, (preset, arch)
+            merge_gain = ar.merged_gain(1 << 20, 1 << 20)
+            if ar.a > 0:
+                assert merge_gain > 0, (preset, ar)  # Eq. 10: the gain IS a
+            serve = build_serve_plan(
+                serve_cfg, param_specs(serve_cfg), fab, serve_axis_sizes,
+                batch_rows=16,
+            )
+            records.append(
+                {
+                    "arch": arch,
+                    "fabric": preset,
+                    "a": ar.a,
+                    "b": ar.b,
+                    "merge_gain_s": merge_gain,
+                    "chosen": rec_t.chosen,
+                    "comm_source": rec_t.comm_source,
+                    "n_groups": len(plan.schedule.groups),
+                    "t_iter_s": res.t_iter,
+                    "t_comm_exposed_s": res.t_comm_exposed,
+                    "serve_op": serve.op,
+                    "serve_groups": len(serve.schedule.groups),
+                    "serve_t_step_s": serve.schedule.result.t_iter,
+                }
+            )
+            rows.append(
+                f"{arch},{preset},a={ar.a:.2e},b={ar.b:.2e},"
+                f"chosen={rec_t.chosen},groups={len(plan.schedule.groups)},"
+                f"t_iter_ms={res.t_iter * 1e3:.3f},"
+                f"serve={serve.op}/{len(serve.schedule.groups)}g"
+            )
+    out = pathlib.Path(__file__).parent / "results" / "BENCH_fabric.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(records, indent=1))
+    rows.append(f"wrote {out}")
+    return rows
+
+
 def wire_layout() -> list[str]:
     """Wire-layout sweep: concat vs variadic vs arena × fp32 vs bf16.
 
@@ -379,7 +452,9 @@ def main() -> None:
                     help="comma-separated table names (default: all)")
     args = ap.parse_args()
 
-    tables = list(ALL_TABLES) + [planning_sweep, wire_layout, tuner, roofline_summary]
+    tables = list(ALL_TABLES) + [
+        planning_sweep, wire_layout, tuner, fabric_sweep, roofline_summary,
+    ]
     if args.only:
         wanted = {n.strip() for n in args.only.split(",")}
         unknown = wanted - {fn.__name__ for fn in tables}

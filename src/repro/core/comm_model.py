@@ -18,18 +18,17 @@ implemented below.  The key property exploited by MG-WFBP is Eq. 10:
 
 so merging messages strictly reduces pure communication time.
 
-TPU adaptation
---------------
-On a TPU v5e pod the DP all-reduce runs over ICI (2-D torus, ~50 GB/s per
-link per direction, ~1 µs per-hop latency) instead of 10GbE MPI.  The form
-of the model is unchanged; only the constants move.  ``TpuInterconnect``
-builds effective (a, b) for a psum over one or more mesh axes, including a
-hierarchical two-level model for cross-pod (DCN) reduction:
-
-    in-pod reduce-scatter  ->  cross-pod all-reduce  ->  in-pod all-gather
-
-which composes as a + b affinely, so the downstream schedule math (which
-only needs ``a`` and ``b``) is untouched.
+Backend presets
+---------------
+On a TPU v5e pod the DP all-reduce runs over ICI (2-D torus) instead of
+10GbE MPI; on a GPU cluster over NVLink + IB.  The form of the model is
+unchanged; only the constants move.  Backend presets live in the fabric
+registry (``repro.fabric``): ``get_fabric("tpu_v5e")`` etc. serve per-op
+affine models (all-reduce, reduce-scatter, all-gather, all-to-all) from
+the same (α, β, γ) primitives.  The historical TPU names —
+``TpuInterconnect``, ``TPU_V5E``, ``tpu_psum_model`` — remain importable
+from this module as re-exports of the ``tpu_v5e`` preset (lazy, to keep
+the primitive layer free of the fabric package).
 """
 
 from __future__ import annotations
@@ -144,89 +143,24 @@ def paper_cluster_model(n: int, algorithm: str = "ring") -> AllReduceModel:
 
 
 # ---------------------------------------------------------------------------
-# TPU v5e interconnect model
+# TPU v5e interconnect model — absorbed by the fabric registry
 # ---------------------------------------------------------------------------
 
-
-@dataclasses.dataclass(frozen=True)
-class TpuInterconnect:
-    """Effective α–β parameters for collectives on a TPU v5e mesh.
-
-    ici_link_bw   : per-link, per-direction ICI bandwidth (B/s)
-    ici_links     : parallel ICI links usable by one ring direction on the
-                    reduced axis (2-D torus: a ring embedded along one axis
-                    has 1 link each way; using both directions doubles it,
-                    which the ring model's 2(N-1)/N factor already assumes
-                    bidirectional use, so we keep ici_links = 1 per ring and
-                    expose n_rings for multi-ring decompositions).
-    ici_alpha     : per-hop ICI latency (s)
-    dcn_bw        : cross-pod (data-center network) bandwidth per pod (B/s)
-    dcn_alpha     : cross-pod startup (s)
-    fixed_overhead: per-collective software overhead (dispatch, fusion
-                    barrier) independent of topology (s)
-    """
-
-    ici_link_bw: float = 50e9  # 50 GB/s/link  (brief's constant)
-    ici_alpha: float = 1e-6
-    n_rings: int = 1
-    dcn_bw: float = 25e9
-    dcn_alpha: float = 50e-6
-    fixed_overhead: float = 5e-6
-    # gamma: on-chip reduce is VPU-bound but effectively free vs the wire;
-    # modeled at HBM speed.
-    gamma: float = 1.0 / 819e9
-
-    def ring_axis(self, n: int) -> AllReduceModel:
-        """Ring all-reduce over one ICI mesh axis of size ``n``."""
-        if n <= 1:
-            return AllReduceModel(a=0.0, b=0.0, name="noop")
-        beta = 1.0 / (self.ici_link_bw * self.n_rings)
-        m = ring(n, self.ici_alpha, beta, self.gamma)
-        return AllReduceModel(a=m.a + self.fixed_overhead, b=m.b, name="ici_ring")
-
-    def dcn_allreduce(self, n_pods: int) -> AllReduceModel:
-        """Ring all-reduce across ``n_pods`` pods over DCN."""
-        if n_pods <= 1:
-            return AllReduceModel(a=0.0, b=0.0, name="noop")
-        m = ring(n_pods, self.dcn_alpha, 1.0 / self.dcn_bw, self.gamma)
-        return AllReduceModel(a=m.a + self.fixed_overhead, b=m.b, name="dcn_ring")
-
-    def psum_model(self, axis_sizes: dict[str, int]) -> AllReduceModel:
-        """Effective (a, b) for a psum over the given mesh axes.
-
-        Multi-axis reduction is modeled as a sequence of per-axis ring
-        all-reduces; message volume per later stage shrinks by the earlier
-        axis size when using reduce-scatter composition, which the standard
-        multi-ring decomposition achieves.  We model it hierarchically:
-
-          * all ICI axes composed as rings on (almost) the full message
-            (2(N-1)/N ≈ 2 regardless of stage split — volume-optimal), with
-            startups added per axis;
-          * DCN ('pod') stage sees ``1/ici_size`` of the message (it runs on
-            reduce-scattered shards — each host only ships its shard).
-        """
-        a_total, b_total = 0.0, 0.0
-        ici_size = 1
-        for name, n in axis_sizes.items():
-            if name == "pod" or n <= 1:
-                continue
-            m = self.ring_axis(n)
-            a_total += m.a
-            # composed rings: stage i operates on 1/prod(previous sizes)
-            b_total += m.b / ici_size
-            ici_size *= n
-        n_pods = axis_sizes.get("pod", 1)
-        if n_pods > 1:
-            m = self.dcn_allreduce(n_pods)
-            a_total += m.a
-            b_total += m.b / ici_size
-        return AllReduceModel(a=a_total, b=b_total, name="tpu_psum")
+#: Names now owned by ``repro.fabric`` (the ``tpu_v5e`` preset), re-exported
+#: here for back compatibility.  Lazy (PEP 562) because the fabric package
+#: imports this module's primitives — an eager import would be circular.
+_FABRIC_SHIMS = ("TpuInterconnect", "TPU_V5E", "tpu_psum_model")
 
 
-#: Default interconnect for the production mesh in launch/mesh.py.
-TPU_V5E = TpuInterconnect()
+def __getattr__(name: str):
+    if name in _FABRIC_SHIMS:
+        from ..fabric import presets as _presets
+
+        value = getattr(_presets, name)
+        globals()[name] = value  # cache: subsequent lookups skip __getattr__
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def tpu_psum_model(axis_sizes: dict[str, int]) -> AllReduceModel:
-    """Convenience wrapper: TPU_V5E effective model for ``axis_sizes``."""
-    return TPU_V5E.psum_model(axis_sizes)
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(_FABRIC_SHIMS))

@@ -45,6 +45,10 @@ Three wire layouts:
                   every jax version, zero concatenate ops, and the only
                   copies are the cast the wire needed anyway.
 
+Every gradient reduction is issued through the typed collective seam
+(``fabric.ops.issue(Collective.ALL_REDUCE, ...)``) — the same vocabulary
+the planner's fabric cost models price and the serve wire path uses.
+
 ``compression='bf16'`` halves fp32 wire traffic on any layout;
 ``'bf16_ef'`` (arena only) additionally carries the rounding error in a
 local error-feedback residual — the EF-SGD trick of
@@ -62,6 +66,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import axis_size, variadic_psum_is_single_op
+# submodule imports (not the fabric package) — core and fabric import each
+# other's leaves, and the package __init__s would cycle
+from ..fabric.model import Collective
+from ..fabric.ops import issue
 from ..kernels.comm_pack import pack_arena, unpack_arena
 from .bucketing import (
     ParamLayout,
@@ -183,14 +191,14 @@ def make_gradient_sync(
                         if len(vals) > 1
                         else vals[0].reshape(-1)
                     )
-                    red = jax.lax.psum(flat, dp_axes)
+                    red = issue(Collective.ALL_REDUCE, flat, dp_axes)
                     parts, off = [], 0
                     for _, _, _, _, shp in metas:
                         n = int(np.prod(shp)) if shp else 1
                         parts.append(red[off : off + n].reshape(shp))
                         off += n
                 else:
-                    parts = list(jax.lax.psum(tuple(vals), dp_axes))
+                    parts = list(issue(Collective.ALL_REDUCE, tuple(vals), dp_axes))
                 for (kind, path, ab, dt, _), r in zip(metas, parts):
                     r = r.astype(dt)
                     if config.average:
@@ -239,7 +247,7 @@ def _arena_group(
         parts, [m[5] for m in metas], off, config.wire_dtype,
         residuals=resid if residual is not None else None,
     )
-    red = jax.lax.psum(arena, dp_axes)
+    red = issue(Collective.ALL_REDUCE, arena, dp_axes)
     scale = (1.0 / world) if config.average else 1.0
     unpacked = unpack_arena(
         red,

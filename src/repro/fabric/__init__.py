@@ -1,0 +1,41 @@
+"""The Fabric API: typed collectives + backend-preset registry.
+
+One registry serves TPU/GPU/CPU clusters for both training and decode:
+
+    from repro.fabric import get_fabric, Collective
+
+    fabric = get_fabric("gpu_nccl")            # or tpu_v5e | dcn_only |
+                                               #    paper_10gbe | a live
+                                               #    MeasuredFabric
+    ar = fabric.cost(Collective.ALL_REDUCE, {"data": 32})   # AllReduceModel
+    ag = fabric.cost("all_gather", {"model": 16})
+
+``cost`` returns the ordinary affine ``AllReduceModel`` — the currency
+every scheduler policy, ``Plan``, and ``ServePlan`` consumes — so the
+whole merge-scheduling stack (Eq. 9/10) is collective- and
+backend-agnostic.  ``fabric.ops.issue`` is the executable counterpart:
+the single seam where a scheduled ``Collective`` becomes a ``jax.lax``
+primitive (used by the training sync and the serve wire alike).
+"""
+
+from .measured import MeasuredFabric
+from .model import Collective, Fabric, RingInterconnect
+from .ops import issue
+from .presets import DCN_ONLY, GPU_NCCL, PAPER_10GBE, TPU_V5E, TpuInterconnect
+from .registry import available_fabrics, get_fabric, register_fabric
+
+__all__ = [
+    "Collective",
+    "DCN_ONLY",
+    "Fabric",
+    "GPU_NCCL",
+    "MeasuredFabric",
+    "PAPER_10GBE",
+    "RingInterconnect",
+    "TPU_V5E",
+    "TpuInterconnect",
+    "available_fabrics",
+    "get_fabric",
+    "issue",
+    "register_fabric",
+]

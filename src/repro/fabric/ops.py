@@ -1,0 +1,36 @@
+"""Typed collective issuing: the one place a ``Collective`` becomes a
+``jax.lax`` primitive.
+
+Both wire paths route through here — the training sync
+(``core/sync.py``: every gradient psum) and the serve-side group
+collectives (``planning/serve.py``: KV all-gathers, expert all-to-alls)
+— so the op vocabulary the planner schedules is the op vocabulary the
+compiler sees, with no ad-hoc ``jax.lax.*`` calls scattered per caller.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from .model import Collective
+
+
+def issue(op: Collective | str, value: Any, axis: str | tuple[str, ...], **kwargs: Any):
+    """Issue one collective inside a ``shard_map`` manual region.
+
+    ``value`` may be a pytree for ``all_reduce`` (variadic psum); the
+    gather/scatter/all-to-all ops take a single array.  ``kwargs`` pass
+    through to the underlying primitive (``tiled``, ``split_axis``, ...).
+    """
+    op = Collective(op)
+    if op is Collective.ALL_REDUCE:
+        return jax.lax.psum(value, axis, **kwargs)
+    if op is Collective.ALL_GATHER:
+        return jax.lax.all_gather(value, axis, **kwargs)
+    if op is Collective.REDUCE_SCATTER:
+        return jax.lax.psum_scatter(value, axis, **kwargs)
+    kwargs.setdefault("split_axis", 0)
+    kwargs.setdefault("concat_axis", 0)
+    return jax.lax.all_to_all(value, axis, **kwargs)

@@ -95,7 +95,8 @@ def model_flops_per_step(cfg, shape) -> float:
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp_data=True,
                n_microbatches: int = 1, skip_segments: bool = False,
-               overrides: dict | None = None, comm_fit: dict | None = None) -> dict:
+               overrides: dict | None = None, comm_fit: dict | None = None,
+               fabric: str = "tpu_v5e") -> dict:
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = arch_config_for_shape(arch, shape_name, cost_mode=False)
@@ -181,6 +182,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp_data=True,
         ),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):  # jax 0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
     rec["whole_program"] = {
         "flops_per_device": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
@@ -195,24 +198,45 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp_data=True,
         rec["totals"] = recompose(cfg, shape, rec, n_dev)
     if shape.kind == "train":
         rec["plan"] = plan_record(cfg, shape, rec.get("segments"), mesh, n_dev,
-                                  comm_fit=comm_fit)
+                                  comm_fit=comm_fit, fabric=fabric)
+    elif shape.kind == "decode":
+        rec["serve_plan"] = serve_plan_record(cfg, shape, mesh, fabric=fabric)
     return rec
 
 
-def plan_record(cfg, shape, segs, mesh, n_dev, comm_fit=None) -> dict:
+def serve_plan_record(cfg, shape, mesh, fabric: str = "tpu_v5e") -> dict:
+    """Serialized decode-side ServePlan for this cell: the same merge math
+    as the train plan, pricing the decode collective (KV all-gather /
+    expert all-to-all) on the selected fabric over the mesh's model axis."""
+    from repro.launch.specs import param_specs
+    from repro.planning import build_serve_plan
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    plan = build_serve_plan(
+        cfg, param_specs(cfg), fabric,
+        {"model": axis_sizes.get("model", 1)},
+        batch_rows=shape.global_batch,
+        provenance={"shape": shape.name},
+    )
+    return plan.to_json_dict()
+
+
+def plan_record(cfg, shape, segs, mesh, n_dev, comm_fit=None,
+                fabric: str = "tpu_v5e") -> dict:
     """Serialized MG-WFBP plan(s) for this train cell.
 
-    The analytic plan comes from Eq. 18 costs; when HLO segments were
-    profiled, a measured plan re-runs the policy on per-unit segment
-    times (``MeasuredCosts.from_segment_times``) — the dry-run analogue
-    of the journal version's online re-plan.  ``comm_fit`` (a serialized
+    The analytic plan comes from Eq. 18 costs priced by the selected
+    ``--fabric`` preset; when HLO segments were profiled, a measured plan
+    re-runs the policy on per-unit segment times
+    (``MeasuredCosts.from_segment_times``) — the dry-run analogue of the
+    journal version's online re-plan.  ``comm_fit`` (a serialized
     ``MeasuredComm`` sweep, --comm-fit) swaps the analytic α–β model for
     a measured fit.  Restarts and benchmarks reload these records
     instead of recomputing Algorithm 1; each plan carries its per-group
     arena wire layout (``fuse='arena'`` buffer sizes).
     """
-    from repro.core import tpu_psum_model
     from repro.core.bucketing import stacked_lm_layout
+    from repro.fabric import get_fabric
     from repro.core.cost_model import TPU_V5E as HW_V5E
     from repro.core.trainer import lm_unit_costs
     from repro.planning import MeasuredComm, MeasuredCosts, build_plan, replan_if_drifted
@@ -235,8 +259,8 @@ def plan_record(cfg, shape, segs, mesh, n_dev, comm_fit=None) -> dict:
         ).fit()
         comm_source = "measured_comm"
     else:
-        ar_model = tpu_psum_model(dp_axes)
-        comm_source = "analytic"
+        ar_model = get_fabric(fabric).cost("all_reduce", dp_axes)
+        comm_source = fabric
     plan = build_plan(
         layout, costs, ar_model,
         policy="mg_wfbp", n_scan_stages=cfg.n_stages,
@@ -389,7 +413,12 @@ def main() -> None:
     ap.add_argument("--comm-fit", default=None,
                     help="JSON file with a serialized MeasuredComm sweep "
                          "({sizes_bytes, times_s[, axes]}); plan records use "
-                         "its α–β fit instead of the analytic TPU model")
+                         "its α–β fit instead of the analytic fabric model")
+    from repro.fabric import available_fabrics
+    ap.add_argument("--fabric", default="tpu_v5e",
+                    choices=list(available_fabrics()),
+                    help="interconnect preset pricing the plan records "
+                         "(train plans AND decode serve plans)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     comm_fit = json.loads(pathlib.Path(args.comm_fit).read_text()) if args.comm_fit else None
@@ -433,6 +462,7 @@ def main() -> None:
                     skip_segments=args.skip_segments,
                     overrides=overrides or None,
                     comm_fit=comm_fit,
+                    fabric=args.fabric,
                 )
                 out = pathlib.Path(args.out) if args.out else RESULTS_DIR / f"{tag}.json"
                 out.write_text(json.dumps(rec, indent=1))

@@ -1,13 +1,18 @@
-"""Serving launcher: batched prefill + decode loop over request batches.
+"""Serving launcher: continuous batching through ``serving.ServingEngine``
+under a fabric-priced ``ServePlan``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \\
-        --batch 4 --prompt-len 32 --tokens 16
+        --slots 4 --requests 8 --prompt-len 32 --tokens 16 \\
+        --fabric gpu_nccl --plan-out /tmp/serve_plan.json
 
-Production notes: on a pod the same prefill/decode steps lower with the
-serve shardings of launch/dryrun.py (KV sequence-sharded over 'model',
-decode-EP MoE).  Continuous batching (per-row positions / eviction) sits
-above `make_decode_step`; this launcher runs the simple batch-synchronous
-variant the benchmark shapes use.
+There is ONE serving code path: this launcher builds the decode-side
+``ServePlan`` (the same merge math as training, priced by the selected
+fabric preset — KV all-gathers for dense archs, expert all-to-alls for
+MoE), hands it to the ``ServingEngine`` (continuous batching: requests
+join free slots, finished rows free them immediately), and reports
+throughput against the plan's predicted step time.  On a pod the same
+engine steps lower with the serve shardings of launch/dryrun.py and the
+plan's groups drive ``planning.serve.make_group_collective``.
 """
 
 from __future__ import annotations
@@ -18,60 +23,82 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import ARCH_NAMES, get_config, get_reduced
-from ..launch.steps import make_decode_step, make_prefill_step
+from ..fabric import available_fabrics
+from ..launch.specs import param_specs
 from ..models.transformer import init_params
+from ..planning import available_policies, build_serve_plan
+from ..serving import Request, ServingEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode batch slots (continuous batching)")
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--fabric", default="tpu_v5e",
+                    choices=list(available_fabrics()),
+                    help="interconnect preset pricing the decode collectives")
+    ap.add_argument("--policy", default="mg_wfbp",
+                    choices=list(available_policies()),
+                    help="scheduler policy for the serve plan")
+    ap.add_argument("--virtual-tp", type=int, default=8,
+                    help="TP size assumed by the serve-plan collective model")
+    ap.add_argument("--plan-out", default=None,
+                    help="write the ServePlan JSON here")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if args.reduced:
         cfg = dataclasses.replace(cfg, param_dtype=jnp.float32)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    max_seq = args.prompt_len + args.tokens
+    max_seq = args.prompt_len + args.tokens + 1
 
-    prefill = jax.jit(make_prefill_step(cfg, None, max_seq=max_seq))
-    decode = jax.jit(make_decode_step(cfg, None))
+    plan = build_serve_plan(
+        cfg, param_specs(cfg), args.fabric, {"model": args.virtual_tp},
+        batch_rows=args.slots, policy=args.policy,
+    )
+    print(f"[serve] {plan.describe()}")
 
-    key = jax.random.PRNGKey(1)
-    if cfg.input_mode == "embeds":
-        batch = {"embeds": jax.random.normal(
-            key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32) * 0.02}
-    else:
-        batch = {"tokens": jax.random.randint(
-            key, (args.batch, args.prompt_len), 0, cfg.vocab)}
+    sample = None
+    if args.temperature > 0:
+        key_box = {"key": jax.random.PRNGKey(2)}
+
+        def sample(logits):
+            key_box["key"], sub = jax.random.split(key_box["key"])
+            return jax.random.categorical(sub, logits / args.temperature, axis=-1)
+
+    engine = ServingEngine(
+        cfg, params, slots=args.slots, max_seq=max_seq, sample=sample, plan=plan,
+    )
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        engine.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, size=args.prompt_len, dtype=np.int32),
+            max_new_tokens=args.tokens,
+        ))
 
     t0 = time.time()
-    logits, caches = prefill(params, batch)
-    print(f"[serve] prefill {args.batch}x{args.prompt_len}: {time.time() - t0:.2f}s")
-
-    tok = jnp.argmax(logits, axis=-1)[:, None]
-    t0 = time.time()
-    for i in range(args.tokens - 1):
-        pos = args.prompt_len + i
-        if cfg.input_mode == "embeds":
-            step_in = {"embeds": params["embed"][tok[:, 0]][:, None].astype(jnp.float32)}
-        else:
-            step_in = {"tokens": tok}
-        logits, caches = decode(params, caches, step_in, jnp.asarray(pos, jnp.int32))
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits, axis=-1)[:, None]
+    completed = engine.run_to_completion()
     dt = time.time() - t0
-    print(f"[serve] decode {args.tokens} x {args.batch}: {dt:.2f}s "
-          f"({args.tokens * args.batch / max(dt, 1e-9):.1f} tok/s)")
+    n_tok = sum(len(r.generated) for r in completed)
+    print(f"[serve] {len(completed)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {args.slots} slots)")
+    predicted = engine.predicted_step_time()
+    if predicted is not None:
+        print(f"[serve] plan predicted step: {predicted * 1e3:.3f}ms "
+              f"({plan.op} over {plan.axis_sizes} on {plan.fabric})")
+    if args.plan_out:
+        path = plan.save(args.plan_out)
+        print(f"[serve] serve plan written to {path}")
 
 
 if __name__ == "__main__":

@@ -45,10 +45,10 @@ import jax.numpy as jnp
 from ..checkpoint import latest_step, load_plan, load_tuner_state
 from ..compat import set_mesh
 from ..configs import ARCH_NAMES, get_config, get_reduced
-from ..core import tpu_psum_model
 from ..core.sync import SyncConfig
 from ..core.trainer import MGWFBPEngine
 from ..data import DataConfig, make_stream
+from ..fabric import MeasuredFabric, available_fabrics, get_fabric
 from ..launch.mesh import make_mesh
 from ..launch.specs import param_specs
 from ..models.transformer import init_params
@@ -97,10 +97,15 @@ def main() -> None:
                          "group AND no concatenate copies)")
     ap.add_argument("--virtual-dp", type=int, default=32,
                     help="DP size assumed by the α–β schedule model")
+    ap.add_argument("--fabric", default="tpu_v5e",
+                    choices=list(available_fabrics()),
+                    help="interconnect preset pricing the DP all-reduce "
+                         "(fabric registry; tpu_v5e matches the historical "
+                         "analytic TPU model)")
     ap.add_argument("--measure-comm", action="store_true",
                     help="fit (α, β) from timed psums on the live mesh "
-                         "(MeasuredComm, journal §V-A) instead of the "
-                         "analytic --virtual-dp TPU model")
+                         "(a MeasuredFabric, journal §V-A) instead of the "
+                         "--fabric preset at --virtual-dp")
     ap.add_argument("--autotune", action="store_true",
                     help="closed-loop auto-tuner: per-unit segment probes feed "
                          "MeasuredCosts, and a registry-wide Tuner sweep picks "
@@ -147,10 +152,12 @@ def main() -> None:
 
     if args.measure_comm:
         comm_obs = MeasuredComm.time_psums(mesh, ("data",))
-        ar_model = comm_obs.fit()
+        fabric = MeasuredFabric.from_comm(comm_obs)
+        ar_model = fabric.cost("all_reduce", {"data": n_dev})
         print(f"[train] measured comm fit: α={ar_model.a:.3e}s β={ar_model.b:.3e}s/B")
     else:
-        ar_model = tpu_psum_model({"data": args.virtual_dp})
+        fabric = get_fabric(args.fabric)
+        ar_model = fabric.cost("all_reduce", {"data": args.virtual_dp})
         # analytic prior sampled on the standard sweep, so the online
         # EWMA re-fit has observations to blend fresh probes into
         comm_obs = MeasuredComm(

@@ -10,6 +10,9 @@ Lifecycle (see README):
     ``wfbp``, ``synceasgd``, ``fixed``, ``mg_wfbp``, ``dp_optimal``,
     ``optimal`` + future ones, one extensible interface.
   * ``plan``      — the frozen, JSON-serializable ``Plan`` artifact.
+  * ``serve``     — the lifecycle extended to decode: ``ServePlan``
+    (KV all-gathers / expert all-to-alls merged by the same policies,
+    priced by a ``repro.fabric`` preset) + ``make_group_collective``.
   * ``costs``     — ``AnalyticCosts`` (Eq. 18) and ``MeasuredCosts``
     (wall-clock / HLO segments), plus ``replan_if_drifted``; on the comm
     side ``MeasuredComm`` (timed-psum α–β fit, journal §V-A Fig. 5(b)).
@@ -30,6 +33,13 @@ from .costs import (
     replan_if_drifted,
 )
 from .plan import PLAN_FORMAT, Plan, build_plan
+from .serve import (
+    SERVE_PLAN_FORMAT,
+    ServePlan,
+    build_serve_plan,
+    decode_unit_costs,
+    make_group_collective,
+)
 from .registry import (
     available_policies,
     build_schedule,
@@ -62,6 +72,11 @@ __all__ = [
     "PLAN_FORMAT",
     "Plan",
     "build_plan",
+    "SERVE_PLAN_FORMAT",
+    "ServePlan",
+    "build_serve_plan",
+    "decode_unit_costs",
+    "make_group_collective",
     "available_policies",
     "build_schedule",
     "get_policy",

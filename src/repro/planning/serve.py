@@ -1,0 +1,337 @@
+"""The Plan lifecycle extended to serving: the frozen ``ServePlan``.
+
+Decode has the same shape of problem as training: per-stage compute runs
+sequentially while per-stage collectives — the KV-cache all-gather of
+TP-sharded attention, the expert all-to-all of EP MoE — can overlap and
+*merge*.  Eq. 9/10 apply verbatim: each collective costs ``a + b·M`` on
+the serving fabric, so merging adjacent stages' messages recovers ``a``
+per merge exactly as in training.  This module reuses the existing
+planner machinery end to end:
+
+  * ``decode_unit_costs`` builds the per-stage cost vector (decode flops
+    per token step + collective payload bytes per stage);
+  * ``build_serve_plan`` selects the dominant decode collective
+    (``all_to_all`` for MoE archs, ``all_gather`` otherwise), prices it
+    through a registry ``Fabric`` (``fabric.cost(op, axis_sizes)``), and
+    runs a registered scheduler policy — the same Algorithm 1 / exact DP
+    the training plan uses — into a frozen, JSON-serializable
+    ``ServePlan``;
+  * ``make_group_collective`` is the executable leg: one fused collective
+    per scheduled serve group (``fabric.ops.issue``), the decode analogue
+    of ``core.sync``'s one-all-reduce-per-group invariant (pinned by the
+    serve lowering test in ``tests/test_fabric.py``).
+
+Consumers: ``serving.engine.ServingEngine`` carries the plan,
+``launch/serve.py`` builds/saves it (``--fabric``/``--plan-out``), and
+``launch/dryrun.py`` records one per decode cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any
+
+import numpy as np
+
+from ..core.comm_model import AllReduceModel
+from ..core.cost_model import Hardware, LayerCost, TPU_V5E
+from ..core.schedule import Schedule
+from ..fabric import Collective, Fabric, get_fabric, issue
+from .registry import build_schedule, resolve_policy_name
+
+SERVE_PLAN_FORMAT = 1
+
+
+def _tree_size(tree: Any) -> int:
+    import jax
+
+    return sum(
+        int(np.prod(getattr(x, "shape", ()) or (1,))) for x in jax.tree.leaves(tree)
+    )
+
+
+def decode_unit_costs(
+    cfg: Any,
+    param_shapes: Any,
+    batch_rows: int,
+    *,
+    cache_dtype_bytes: int = 2,
+    act_dtype_bytes: int = 2,
+) -> list[LayerCost]:
+    """Per-scan-stage decode cost vector (one token per row per step).
+
+    ``grad_bytes`` is repurposed as the stage's *collective payload* per
+    decode step: the fresh KV rows every attention layer in the stage
+    must all-gather across the TP shards, plus (MoE) the dispatch+combine
+    activations of the expert all-to-all.  ``bwd_flops`` carries the
+    stage's decode compute (the timeline's sequential axis; ``t_f`` is 0
+    for decode).  Head/embed run outside the scan and ship nothing, so
+    units are exactly the ``n_stages`` scan stages — what
+    ``make_group_collective`` slices a stacked cache tree by.
+    """
+    stage_p = _tree_size(param_shapes["stages"]) // cfg.n_stages
+    # every non-recurrent block carries an attention sublayer with a KV
+    # cache (models/transformer._init_sublayer) — 'moe' included
+    attn_layers = sum(1 for kind in cfg.pattern if kind not in ("rwkv", "rec"))
+    kv_row = (
+        cfg.attention.n_kv_heads * cfg.attention.head_dim if cfg.attention else 0
+    )
+    # K and V, one fresh row per sequence per attention layer per step
+    kv_bytes = 2 * batch_rows * kv_row * cache_dtype_bytes * attn_layers
+    a2a_bytes = 0
+    active = 1.0
+    if cfg.moe is not None:
+        active = cfg.moe.top_k / cfg.moe.n_experts
+        active = 0.25 + 0.75 * active if active < 1 else 1.0
+        # dispatch + combine of top_k expert activations per token
+        a2a_bytes = (
+            2 * batch_rows * cfg.moe.top_k * cfg.d_model * act_dtype_bytes * len(cfg.pattern)
+        )
+    out = []
+    for i in range(cfg.n_stages):
+        out.append(
+            LayerCost(
+                name=f"stage_{i}",
+                params=stage_p,
+                grad_bytes=max(1, kv_bytes + a2a_bytes),
+                bwd_flops=2.0 * stage_p * batch_rows * active,
+                fwd_flops=0.0,
+            )
+        )
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """Immutable record of one decode-side scheduling decision.
+
+    Attributes:
+      arch:       architecture name the plan was built for.
+      op:         the scheduled collective (``Collective`` value string).
+      axis:       mesh axis the collective runs over at execution time.
+      axis_sizes: mesh axis sizes the fabric priced the op at.
+      fabric:     registry name of the fabric the model came from.
+      costs:      per-stage decode cost vector (see ``decode_unit_costs``).
+      model:      affine (a, b) model of ``op`` on the fabric.
+      hw:         hardware model converting cost flops to seconds.
+      schedule:   the merge schedule over stages (with evaluated timeline).
+      provenance: string map — at least ``policy`` and ``fabric``.
+    """
+
+    arch: str
+    op: str
+    axis: str
+    axis_sizes: dict[str, int]
+    fabric: str
+    costs: tuple[LayerCost, ...]
+    model: AllReduceModel
+    hw: Hardware
+    schedule: Schedule
+    provenance: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.costs)
+
+    @property
+    def policy(self) -> str:
+        return self.provenance.get("policy", self.schedule.method)
+
+    def describe(self) -> str:
+        return (
+            f"serve_plan[{self.policy}|{self.fabric}|{self.op}] "
+            f"{self.schedule.describe()}"
+        )
+
+    # -- serialization (mirrors planning.Plan) ------------------------------
+
+    def to_json_dict(self) -> dict[str, Any]:
+        sched: dict[str, Any] = {
+            "groups": [list(g) for g in self.schedule.groups],
+            "method": self.schedule.method,
+            "result": None,
+        }
+        if self.schedule.result is not None:
+            r = self.schedule.result
+            sched["result"] = {
+                "t_iter": r.t_iter,
+                "t_f": r.t_f,
+                "t_b": r.t_b,
+                "t_comm_total": r.t_comm_total,
+                "t_comm_exposed": r.t_comm_exposed,
+                "groups": [
+                    {
+                        "layers": list(tr.layers),
+                        "nbytes": tr.nbytes,
+                        "avail": tr.avail,
+                        "start": tr.start,
+                        "finish": tr.finish,
+                    }
+                    for tr in r.groups
+                ],
+            }
+        return {
+            "format": SERVE_PLAN_FORMAT,
+            "arch": self.arch,
+            "op": self.op,
+            "axis": self.axis,
+            "axis_sizes": dict(self.axis_sizes),
+            "fabric": self.fabric,
+            "costs": [dataclasses.asdict(c) for c in self.costs],
+            "model": dataclasses.asdict(self.model),
+            "hw": dataclasses.asdict(self.hw),
+            "schedule": sched,
+            "provenance": dict(self.provenance),
+        }
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_json_dict(), indent=indent)
+
+    @classmethod
+    def from_json_dict(cls, d: dict[str, Any]) -> "ServePlan":
+        from ..core.timeline import GroupTrace, TimelineResult
+
+        if d.get("format") != SERVE_PLAN_FORMAT:
+            raise ValueError(f"unsupported serve plan format {d.get('format')!r}")
+        result = None
+        if d["schedule"]["result"] is not None:
+            r = d["schedule"]["result"]
+            result = TimelineResult(
+                t_iter=r["t_iter"],
+                t_f=r["t_f"],
+                t_b=r["t_b"],
+                t_comm_total=r["t_comm_total"],
+                t_comm_exposed=r["t_comm_exposed"],
+                groups=tuple(
+                    GroupTrace(
+                        layers=tuple(tr["layers"]),
+                        nbytes=tr["nbytes"],
+                        avail=tr["avail"],
+                        start=tr["start"],
+                        finish=tr["finish"],
+                    )
+                    for tr in r["groups"]
+                ),
+            )
+        return cls(
+            arch=d["arch"],
+            op=d["op"],
+            axis=d["axis"],
+            axis_sizes={k: int(v) for k, v in d["axis_sizes"].items()},
+            fabric=d["fabric"],
+            costs=tuple(LayerCost(**c) for c in d["costs"]),
+            model=AllReduceModel(**d["model"]),
+            hw=Hardware(**d["hw"]),
+            schedule=Schedule(
+                groups=tuple(tuple(g) for g in d["schedule"]["groups"]),
+                method=d["schedule"]["method"],
+                result=result,
+            ),
+            provenance=dict(d["provenance"]),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServePlan":
+        return cls.from_json_dict(json.loads(text))
+
+    def save(self, path: str | pathlib.Path) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json())
+        return p
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "ServePlan":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+def build_serve_plan(
+    cfg: Any,
+    param_shapes: Any,
+    fabric: str | Fabric,
+    axis_sizes: dict[str, int],
+    *,
+    batch_rows: int,
+    policy: str = "mg_wfbp",
+    hw: Hardware = TPU_V5E,
+    axis: str = "model",
+    op: Collective | str | None = None,
+    policy_opts: dict[str, Any] | None = None,
+    provenance: dict[str, str] | None = None,
+) -> ServePlan:
+    """Cost vector + fabric + policy -> evaluated ServePlan.
+
+    The collective defaults to the arch's dominant decode op
+    (``all_to_all`` for MoE, ``all_gather`` otherwise); any registered
+    fabric prices it — the same registry, the same merge math, training
+    and serving."""
+    fab = get_fabric(fabric)
+    if op is None:
+        op = Collective.ALL_TO_ALL if cfg.moe is not None else Collective.ALL_GATHER
+    op = Collective(op)
+    model = fab.cost(op, axis_sizes)
+    costs = decode_unit_costs(cfg, param_shapes, batch_rows)
+    policy = resolve_policy_name(policy)
+    schedule = build_schedule(
+        policy, costs, model, hw=hw, t_f=0.0, **(policy_opts or {})
+    )
+    prov = {"policy": policy, "fabric": fab.name, "op": op.value}
+    if provenance:
+        prov.update(provenance)
+    return ServePlan(
+        arch=cfg.name,
+        op=op.value,
+        axis=axis,
+        axis_sizes=dict(axis_sizes),
+        fabric=fab.name,
+        costs=tuple(costs),
+        model=model,
+        hw=hw,
+        schedule=schedule,
+        provenance=prov,
+    )
+
+
+def make_group_collective(plan: ServePlan, axis: str | None = None):
+    """Executable serve wire: ``fn(stacked) -> list`` issuing exactly ONE
+    collective per scheduled group.
+
+    ``stacked`` is a per-stage payload array with the scan axis leading
+    (``(n_stages, ...)`` — e.g. the fresh KV rows of every stage).  Each
+    group's stage slice is flattened into one buffer and shipped with the
+    plan's collective over ``axis`` — the decode analogue of the training
+    sync's one-all-reduce-per-group guarantee.  All-to-all buffers are
+    padded up to a multiple of the axis size (padding is a local reshape,
+    never an extra collective).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..compat import axis_size
+
+    ax = axis or plan.axis
+    op = Collective(plan.op)
+    groups = plan.schedule.groups
+
+    def run(stacked):
+        if stacked.shape[0] != plan.num_stages:
+            raise ValueError(
+                f"payload has {stacked.shape[0]} stages, plan has {plan.num_stages}"
+            )
+        outs = []
+        for gi, (lo, hi) in enumerate(groups):
+            flat = stacked[lo - 1 : hi].reshape(-1)
+            with jax.named_scope(f"serve_group{gi}_s{lo}_{hi}"):
+                if op is Collective.ALL_TO_ALL:
+                    n = axis_size(ax)
+                    pad = (-flat.shape[0]) % n
+                    if pad:
+                        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+                    outs.append(issue(op, flat.reshape(n, -1), ax))
+                else:
+                    outs.append(issue(op, flat, ax))
+        return outs
+
+    return run

@@ -210,6 +210,35 @@ class Tuner:
         )
         return dataclasses.replace(best_plan, provenance=prov)
 
+    def sweep_fabric(
+        self,
+        costs: list[LayerCost],
+        fabric: Any,
+        axis_sizes: dict[str, int],
+        hw: Hardware,
+        *,
+        op: str = "all_reduce",
+        cost_source: str = "analytic",
+        trigger: str = "sweep",
+    ) -> Plan:
+        """``sweep`` with the (α, β) model priced by a registry fabric.
+
+        ``fabric`` is a preset name or live ``Fabric`` instance
+        (``fabric.get_fabric``); the fabric's name lands in the record's
+        ``comm_source`` so sweeps across backends stay attributable.
+        """
+        from ..fabric import get_fabric
+
+        fab = get_fabric(fabric)
+        return self.sweep(
+            costs,
+            fab.cost(op, axis_sizes),
+            hw,
+            cost_source=cost_source,
+            comm_source=fab.name,
+            trigger=trigger,
+        )
+
     def observe(self, observed_t_iter: float) -> SweepRecord:
         """Record the measured iteration time against the latest sweep —
         the predicted-vs-observed pair every provenance story needs."""

@@ -17,7 +17,7 @@ KV allocator is the production refinement and slots behind this API.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import TYPE_CHECKING, Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,9 @@ import numpy as np
 from ..launch.steps import make_decode_step, make_prefill_step
 from ..models.common import ArchConfig
 from ..models.transformer import init_caches
+
+if TYPE_CHECKING:
+    from ..planning.serve import ServePlan
 
 
 @dataclasses.dataclass
@@ -38,7 +41,19 @@ class Request:
 
 
 class ServingEngine:
-    """Synchronous-step continuous batching over fixed decode slots."""
+    """Synchronous-step continuous batching over fixed decode slots.
+
+    ``plan`` is the frozen decode-side ``planning.ServePlan`` the engine
+    runs under: on a sharded mesh its schedule groups the per-stage
+    decode collectives (``planning.serve.make_group_collective``), and
+    its evaluated timeline is the engine's predicted per-step cost
+    (``predicted_step_time``).  Single-device engines still carry it for
+    provenance — ``launch/serve.py`` builds, reports, and serializes it.
+
+    Token models feed prompts directly; ``input_mode == 'embeds'`` archs
+    (audio/VLM stub frontends) route token ids through the model's
+    embedding table — the same one-engine code path either way.
+    """
 
     def __init__(
         self,
@@ -48,12 +63,13 @@ class ServingEngine:
         slots: int = 4,
         max_seq: int = 512,
         sample: Callable[[jax.Array], jax.Array] | None = None,
+        plan: "ServePlan | None" = None,
     ):
-        assert cfg.input_mode == "tokens", "engine demo supports token models"
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
+        self.plan = plan
         self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
         self._prefill = jax.jit(make_prefill_step(cfg, None, max_seq=max_seq))
         self._decode = jax.jit(make_decode_step(cfg, None))
@@ -63,6 +79,30 @@ class ServingEngine:
         self.next_token = np.zeros((slots,), np.int32)
         self.waiting: list[Request] = []
         self.completed: list[Request] = []
+
+    # -- inputs ------------------------------------------------------------
+
+    def _embed_rows(self, ids: jax.Array) -> jax.Array:
+        """Stub frontend for ``input_mode == 'embeds'`` archs: token ids ->
+        embedding-table rows (what ``launch/serve.py`` historically did)."""
+        return self.params["embed"][ids].astype(jnp.float32)
+
+    def _prefill_input(self, prompt: np.ndarray) -> dict:
+        ids = jnp.asarray(prompt[None, :])
+        if self.cfg.input_mode == "embeds":
+            return {"embeds": self._embed_rows(ids)}
+        return {"tokens": ids}
+
+    def _decode_input(self, tokens: jax.Array) -> dict:
+        if self.cfg.input_mode == "embeds":
+            return {"embeds": self._embed_rows(tokens)}
+        return {"tokens": tokens}
+
+    def predicted_step_time(self) -> float | None:
+        """Modeled decode-step seconds from the plan's evaluated timeline."""
+        if self.plan is None or self.plan.schedule.result is None:
+            return None
+        return self.plan.schedule.result.t_iter
 
     # -- admission ---------------------------------------------------------
 
@@ -75,7 +115,7 @@ class ServingEngine:
             slot = free.pop(0)
             req = self.waiting.pop(0)
             logits, fresh = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt[None, :])}
+                self.params, self._prefill_input(req.prompt)
             )
             # splice the single-row prefill caches into this slot
             self.caches = self._splice(fresh, slot)
@@ -112,7 +152,8 @@ class ServingEngine:
         pos = int(max(self.row_pos[s] for s in self.active))
         tokens = jnp.asarray(self.next_token[:, None])
         logits, self.caches = self._decode(
-            self.params, self.caches, {"tokens": tokens}, jnp.asarray(pos, jnp.int32)
+            self.params, self.caches, self._decode_input(tokens),
+            jnp.asarray(pos, jnp.int32),
         )
         sampled = np.asarray(self.sample(logits))
         for slot, req in list(self.active.items()):
