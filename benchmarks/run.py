@@ -17,15 +17,15 @@ import pathlib
 import sys
 import time
 
-# The wire-layout sweep lowers the sync under shard_map over 8 virtual
-# devices; flags must land before the first jax import.
-if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
-    ).strip()
+# The wire-layout and serve-exec sweeps run shard_map over 8 virtual
+# devices; flags must land before jax initializes its backend.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, "src")
+
+from repro.compat import ensure_virtual_devices
+
+ensure_virtual_devices(8)
 
 
 def roofline_summary() -> list[str]:
@@ -335,6 +335,135 @@ def fabric_sweep() -> list[str]:
     return rows
 
 
+def serve_exec() -> list[str]:
+    """Executed-ServePlan acceptance -> ``BENCH_serve_exec.json``.
+
+    Runs the plan-driven sharded decode (``serving.sharded``) on a
+    virtual TP mesh and closes the serve measurement loop:
+
+      * sharded-vs-unsharded token equality (the same requests decoded
+        both ways must match token-for-token);
+      * predicted (``ServePlan.schedule.result.t_iter``) vs observed
+        (``ServeTimer`` median) step time, with a finite ratio;
+      * per-group measured collective seconds at the plan's exact wire
+        payloads — the merged schedule's total must not exceed the
+        per-stage (wfbp) baseline's on the same mesh (Eq. 10 executed,
+        not just priced);
+      * op-specific measured fits (``'all_gather@model'``) from real
+        decode-gather sweeps, served back through a ``MeasuredFabric``.
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.compat import make_mesh
+    from repro.configs import get_reduced
+    from repro.fabric import MeasuredFabric
+    from repro.launch.specs import param_specs
+    from repro.models.transformer import init_params
+    from repro.planning import build_serve_plan, serve_fabric_fits, time_serve_groups
+    from repro.serving import Request, ServeTimer, ServingEngine
+
+    rows = ["table=serve_exec"]
+    tp = min(8, jax.device_count())
+    mesh = make_mesh((tp,), ("model",))
+    cfg = _dc.replace(get_reduced("tinyllama-1.1b"), param_dtype=jnp.float32)
+    shapes = param_specs(cfg)
+    slots, prompt_len, n_tokens = 2, 8, 6
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    # fp32 engine caches: price the wire at the bytes the step ships
+    wire_bytes = {"cache_dtype_bytes": 4, "act_dtype_bytes": 4}
+    merged = build_serve_plan(cfg, shapes, "gpu_nccl", {"model": tp},
+                              batch_rows=slots, policy="mg_wfbp", **wire_bytes)
+    per_stage = build_serve_plan(cfg, shapes, "gpu_nccl", {"model": tp},
+                                 batch_rows=slots, policy="wfbp", **wire_bytes)
+
+    def run_engine(mesh_arg, plan):
+        timer = ServeTimer(skip_first=2)
+        eng = ServingEngine(cfg, params, slots=slots,
+                            max_seq=prompt_len + n_tokens + 1,
+                            plan=plan, mesh=mesh_arg, timer=timer)
+        rng = np.random.default_rng(0)
+        for rid in range(slots + 1):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=prompt_len, dtype=np.int32),
+                max_new_tokens=n_tokens,
+            ))
+        done = eng.run_to_completion()
+        return {r.rid: r.generated for r in done}, timer
+
+    base_tokens, _ = run_engine(None, merged)
+    sharded_tokens, timer = run_engine(mesh, merged)
+    tokens_match = base_tokens == sharded_tokens
+    observed = timer.median()
+    predicted = merged.schedule.result.t_iter
+    ratio = observed / predicted
+
+    # min-of-7 per group: the merged-vs-per-stage comparison below is a
+    # hard acceptance gate, so squeeze scheduler jitter out of the samples
+    merged_group_s = time_serve_groups(merged, mesh, repeats=7)
+    per_stage_group_s = time_serve_groups(per_stage, mesh, repeats=7)
+    fits = serve_fabric_fits(mesh, ops=("all_gather",), axes=("model",))
+    fab = MeasuredFabric(models=fits, name="measured_serve")
+    measured_plan = build_serve_plan(cfg, shapes, fab, {"model": tp},
+                                     batch_rows=slots, **wire_bytes)
+
+    assert tokens_match, "sharded decode diverged from unsharded"
+    assert observed is not None and np.isfinite(ratio) and ratio > 0, (observed, ratio)
+    assert sum(merged_group_s) <= sum(per_stage_group_s), (
+        merged_group_s, per_stage_group_s)
+
+    record = {
+        "arch": cfg.name,
+        "tp": tp,
+        "slots": slots,
+        "fabric": "gpu_nccl",
+        "tokens_match": tokens_match,
+        "predicted_step_s": predicted,
+        "observed_step_s": observed,
+        "observed_over_predicted": ratio,
+        "merged": {
+            "policy": merged.policy,
+            "n_groups": len(merged.schedule.groups),
+            "groups": [
+                dict(g, measured_s=t)
+                for g, t in zip(merged.group_summaries(), merged_group_s)
+            ],
+            "measured_total_s": sum(merged_group_s),
+        },
+        "per_stage": {
+            "policy": per_stage.policy,
+            "n_groups": len(per_stage.schedule.groups),
+            "measured_total_s": sum(per_stage_group_s),
+        },
+        "measured_fits": {
+            k: {"a": m.a, "b": m.b} for k, m in fits.items()
+        },
+        "measured_plan": {
+            "fabric": measured_plan.fabric,
+            "n_groups": len(measured_plan.schedule.groups),
+            "t_iter_s": measured_plan.schedule.result.t_iter,
+        },
+    }
+    rows.append(f"{cfg.name},tp={tp},tokens_match={tokens_match},"
+                f"pred_ms={predicted * 1e3:.3f},obs_ms={observed * 1e3:.3f},"
+                f"ratio={ratio:.0f}")
+    rows.append(f"merged({merged.policy}),groups={len(merged.schedule.groups)},"
+                f"gather_total_us={sum(merged_group_s) * 1e6:.1f}")
+    rows.append(f"per_stage(wfbp),groups={len(per_stage.schedule.groups)},"
+                f"gather_total_us={sum(per_stage_group_s) * 1e6:.1f}")
+    for key, m in fits.items():
+        rows.append(f"fit,{key},a={m.a:.3e},b={m.b:.3e}")
+    out = pathlib.Path(__file__).parent / "results" / "BENCH_serve_exec.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=1))
+    rows.append(f"wrote {out}")
+    return rows
+
+
 def wire_layout() -> list[str]:
     """Wire-layout sweep: concat vs variadic vs arena × fp32 vs bf16.
 
@@ -453,7 +582,8 @@ def main() -> None:
     args = ap.parse_args()
 
     tables = list(ALL_TABLES) + [
-        planning_sweep, wire_layout, tuner, fabric_sweep, roofline_summary,
+        planning_sweep, wire_layout, tuner, fabric_sweep, serve_exec,
+        roofline_summary,
     ]
     if args.only:
         wanted = {n.strip() for n in args.only.split(",")}

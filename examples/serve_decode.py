@@ -1,11 +1,16 @@
-"""Serving example: fabric-priced decode plans + continuous batching.
+"""Serving example: fabric-priced decode plans, continuous batching, and
+the plan *executed* — the same prompts decoded sharded and unsharded.
 
 Builds the decode-side ServePlan for two interconnect presets on one
 arch and prints how the chosen fabric moves the merge set — the TPU's
 microsecond startup keeps per-stage KV all-gathers separate, while
 NCCL-class launch overhead merges them (Eq. 10: the merge gain IS α) —
 then runs the request batch through the one serving code path
-(``serving.ServingEngine``) under the selected fabric's plan.
+(``serving.ServingEngine``) twice: unsharded, and sharded over a virtual
+TP mesh where every scheduled serve group issues exactly one fused
+collective.  The tokens must match exactly, and the closing table shows
+each group's predicted collective time next to a real measured one
+(``planning.time_serve_groups``) — see docs/fabrics.md.
 
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b \\
         --fabric gpu_nccl --tokens 12
@@ -17,17 +22,28 @@ import time
 
 sys.path.insert(0, "src")
 
+# the sharded half of the demo wants a few virtual CPU devices; the flag
+# must land before jax initializes its backend
+from repro.compat import ensure_virtual_devices
+
+ensure_virtual_devices(4)
+
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.launch.specs import param_specs
 from repro.models.transformer import init_params
-from repro.planning import build_serve_plan
-from repro.serving import Request, ServingEngine
+from repro.planning import (
+    build_serve_plan,
+    group_comparison_lines,
+    time_serve_groups,
+)
+from repro.serving import Request, ServeTimer, ServingEngine
 
 
 def main():
@@ -66,25 +82,50 @@ def main():
 
     cfg = dataclasses.replace(get_reduced(args.arch), param_dtype=jnp.float32)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    plan = build_serve_plan(cfg, param_specs(cfg), args.fabric, {"model": 8},
-                            batch_rows=args.slots)
-    engine = ServingEngine(cfg, params, slots=args.slots,
-                           max_seq=args.prompt_len + args.tokens + 1, plan=plan)
-    rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        engine.submit(Request(
-            rid=rid,
-            prompt=rng.integers(0, cfg.vocab, size=args.prompt_len, dtype=np.int32),
-            max_new_tokens=args.tokens,
-        ))
-    t0 = time.time()
-    completed = engine.run_to_completion()
-    dt = time.time() - t0
-    n_tok = sum(len(r.generated) for r in completed)
-    print(f"\n== engine ({args.fabric} plan, reduced arch) ==")
-    print(f"{len(completed)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
-    print("sample request 0:", completed[0].generated)
+    tp = min(4, jax.device_count())
+    mesh = make_mesh((tp,), ("model",))
+    # the reduced engine runs fp32 caches: price the wire at 4 bytes/elem
+    # so the measured group collectives ship exactly the predicted bytes
+    plan = build_serve_plan(cfg, param_specs(cfg), args.fabric, {"model": tp},
+                            batch_rows=args.slots,
+                            cache_dtype_bytes=4, act_dtype_bytes=4)
+
+    def run(mesh_arg):
+        engine = ServingEngine(
+            cfg, params, slots=args.slots,
+            max_seq=args.prompt_len + args.tokens + 1, plan=plan,
+            mesh=mesh_arg, timer=ServeTimer(skip_first=1),
+        )
+        rng = np.random.default_rng(0)
+        for rid in range(args.requests):
+            engine.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=args.prompt_len, dtype=np.int32),
+                max_new_tokens=args.tokens,
+            ))
+        t0 = time.time()
+        completed = engine.run_to_completion()
+        return completed, time.time() - t0, engine
+
+    for label, mesh_arg in (("unsharded", None), (f"sharded TP={tp}", mesh)):
+        completed, dt, engine = run(mesh_arg)
+        n_tok = sum(len(r.generated) for r in completed)
+        print(f"\n== engine, {label} ({args.fabric} plan, reduced arch) ==")
+        print(f"{len(completed)} requests, {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
+        print("sample request 0:", completed[0].generated)
+        if mesh_arg is None:
+            base = {r.rid: r.generated for r in completed}
+        else:
+            match = base == {r.rid: r.generated for r in completed}
+            print(f"tokens match unsharded run: {match}")
+            obs = engine.observed_step_time()
+            pred = engine.predicted_step_time()
+            if obs is not None and pred is not None:
+                print(f"step: predicted {pred * 1e3:.3f}ms, observed {obs * 1e3:.3f}ms")
+            print("per-group predicted vs measured collective:")
+            for line in group_comparison_lines(plan, time_serve_groups(plan, mesh)):
+                print("  " + line)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,33 @@ from typing import Any
 
 import jax
 
-__all__ = ["shard_map", "set_mesh", "make_mesh", "axis_size", "tpu_compiler_params"]
+__all__ = [
+    "ensure_virtual_devices",
+    "shard_map",
+    "set_mesh",
+    "make_mesh",
+    "axis_size",
+    "tpu_compiler_params",
+]
+
+
+def ensure_virtual_devices(n: int = 8) -> None:
+    """Force ``n`` virtual CPU devices if no device count is set yet.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``
+    unless one is already present.  Must run before jax initializes its
+    backend (importing jax is fine — the flag is read on first device
+    use).  The one bootstrap shared by ``launch/serve.py``,
+    ``benchmarks/run.py``, and the sharded-decode examples.
+    """
+    import os
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}"
+    ).strip()
 
 
 @functools.cache

@@ -51,6 +51,13 @@ class MeasuredFabric:
         models = {"+".join(sorted(c.axes)): c.fit() for c in comms}
         return cls(models=models, name=name)
 
+    def with_fits(self, fits: dict[str, AllReduceModel]) -> "MeasuredFabric":
+        """New fabric with ``fits`` merged in — op-specific keys
+        (``'all_gather@model'``, e.g. from
+        ``planning.serve_fabric_fits``) override the ring derivation for
+        that op; axes keys replace the base all-reduce fit."""
+        return dataclasses.replace(self, models={**self.models, **fits})
+
     def cost(self, op: Collective | str, axis_sizes: dict[str, int]) -> AllReduceModel:
         op = Collective(op)
         key = _axes_key(axis_sizes)

@@ -42,7 +42,13 @@ def register_fabric(
 
 
 def get_fabric(name: str | Fabric) -> Fabric:
-    """Resolve a preset name (or pass a live instance through)."""
+    """Resolve a preset name (or pass a live instance through).
+
+    Example::
+
+        >>> get_fabric("gpu_nccl").cost("all_reduce", {"data": 8}).a > 0
+        True
+    """
     if not isinstance(name, str):
         if not hasattr(name, "cost"):
             raise TypeError(f"not a Fabric (no .cost): {type(name).__name__}")

@@ -218,6 +218,9 @@ def serve_plan_record(cfg, shape, mesh, fabric: str = "tpu_v5e") -> dict:
         batch_rows=shape.global_batch,
         provenance={"shape": shape.name},
     )
+    import textwrap
+
+    print(textwrap.indent(plan.describe(), "  "))
     return plan.to_json_dict()
 
 

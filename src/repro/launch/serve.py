@@ -1,21 +1,53 @@
 """Serving launcher: continuous batching through ``serving.ServingEngine``
-under a fabric-priced ``ServePlan``.
+under a fabric-priced ``ServePlan`` — and, with ``--sharded``, the plan
+*executed* on a virtual TP mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \\
         --slots 4 --requests 8 --prompt-len 32 --tokens 16 \\
         --fabric gpu_nccl --plan-out /tmp/serve_plan.json
+
+    # execute the plan: sharded decode over a virtual TP mesh, measured
+    # serve fabrics, predicted-vs-observed per group
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \\
+        --reduced --virtual-tp 4 --sharded --measure-comm
 
 There is ONE serving code path: this launcher builds the decode-side
 ``ServePlan`` (the same merge math as training, priced by the selected
 fabric preset — KV all-gathers for dense archs, expert all-to-alls for
 MoE), hands it to the ``ServingEngine`` (continuous batching: requests
 join free slots, finished rows free them immediately), and reports
-throughput against the plan's predicted step time.  On a pod the same
-engine steps lower with the serve shardings of launch/dryrun.py and the
-plan's groups drive ``planning.serve.make_group_collective``.
+throughput against the plan's predicted step time.  ``--sharded`` runs
+the engine's decode under ``shard_map`` on a ``--virtual-tp``-wide mesh
+where every scheduled serve group issues exactly one fused collective
+(``serving.sharded``); ``--measure-comm`` times the real per-group
+collectives, fits op-specific (α, β) constants into a ``MeasuredFabric``
+(``'all_gather@model'``-style keys), and prints the predicted-vs-measured
+per-group table.
 """
 
 from __future__ import annotations
+
+import sys
+
+
+def _requested_virtual_tp() -> int:
+    """Pre-argparse scan for ``--virtual-tp N`` / ``--virtual-tp=N``."""
+    for i, arg in enumerate(sys.argv):
+        try:
+            if arg == "--virtual-tp":
+                return int(sys.argv[i + 1])
+            if arg.startswith("--virtual-tp="):
+                return int(arg.split("=", 1)[1])
+        except (IndexError, ValueError):
+            break
+    return 8
+
+
+if "--sharded" in sys.argv or "--measure-comm" in sys.argv:
+    # the TP mesh needs the virtual CPU devices before jax initializes
+    from ..compat import ensure_virtual_devices
+
+    ensure_virtual_devices(_requested_virtual_tp())
 
 import argparse
 import dataclasses
@@ -25,12 +57,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import make_mesh
 from ..configs import ARCH_NAMES, get_config, get_reduced
-from ..fabric import available_fabrics
+from ..fabric import MeasuredFabric, available_fabrics
 from ..launch.specs import param_specs
 from ..models.transformer import init_params
-from ..planning import available_policies, build_serve_plan
-from ..serving import Request, ServingEngine
+from ..planning import (
+    available_policies,
+    build_serve_plan,
+    group_comparison_lines,
+    serve_fabric_fits,
+    time_serve_groups,
+)
+from ..serving import Request, ServeTimer, ServingEngine
 
 
 def main() -> None:
@@ -50,7 +89,15 @@ def main() -> None:
                     choices=list(available_policies()),
                     help="scheduler policy for the serve plan")
     ap.add_argument("--virtual-tp", type=int, default=8,
-                    help="TP size assumed by the serve-plan collective model")
+                    help="TP size of the serve-plan collective model (and of "
+                         "the virtual mesh under --sharded)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="execute the plan: sharded decode on a virtual TP "
+                         "mesh, one fused collective per serve group")
+    ap.add_argument("--measure-comm", action="store_true",
+                    help="time the real per-group collectives, fit a "
+                         "MeasuredFabric, and print predicted-vs-measured "
+                         "(implies --sharded's mesh)")
     ap.add_argument("--plan-out", default=None,
                     help="write the ServePlan JSON here")
     args = ap.parse_args()
@@ -61,9 +108,22 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg)
     max_seq = args.prompt_len + args.tokens + 1
 
+    mesh = None
+    tp = args.virtual_tp
+    if args.sharded or args.measure_comm:
+        tp = min(args.virtual_tp, jax.device_count())
+        if tp < args.virtual_tp:
+            print(f"[serve] only {jax.device_count()} devices visible; "
+                  f"clamping TP {args.virtual_tp} -> {tp}")
+        mesh = make_mesh((tp,), ("model",))
+
+    # ServingEngine allocates fp32 decode caches, so the executed wire
+    # ships 4-byte elements — price the plan at what the step ships
+    cache_bytes = 4
     plan = build_serve_plan(
-        cfg, param_specs(cfg), args.fabric, {"model": args.virtual_tp},
+        cfg, param_specs(cfg), args.fabric, {"model": tp},
         batch_rows=args.slots, policy=args.policy,
+        cache_dtype_bytes=cache_bytes, act_dtype_bytes=cache_bytes,
     )
     print(f"[serve] {plan.describe()}")
 
@@ -75,8 +135,10 @@ def main() -> None:
             key_box["key"], sub = jax.random.split(key_box["key"])
             return jax.random.categorical(sub, logits / args.temperature, axis=-1)
 
+    timer = ServeTimer()
     engine = ServingEngine(
-        cfg, params, slots=args.slots, max_seq=max_seq, sample=sample, plan=plan,
+        cfg, params, slots=args.slots, max_seq=max_seq, sample=sample,
+        plan=plan, mesh=mesh if args.sharded else None, timer=timer,
     )
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -90,12 +152,38 @@ def main() -> None:
     completed = engine.run_to_completion()
     dt = time.time() - t0
     n_tok = sum(len(r.generated) for r in completed)
+    mode = f"sharded TP={tp}" if args.sharded else "unsharded"
     print(f"[serve] {len(completed)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {args.slots} slots)")
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {args.slots} slots, {mode})")
     predicted = engine.predicted_step_time()
+    observed = engine.observed_step_time()
     if predicted is not None:
         print(f"[serve] plan predicted step: {predicted * 1e3:.3f}ms "
               f"({plan.op} over {plan.axis_sizes} on {plan.fabric})")
+    if observed is not None:
+        print(f"[serve] observed step: {observed * 1e3:.3f}ms "
+              f"(observed/predicted = {observed / predicted:.1f}x)"
+              if predicted else
+              f"[serve] observed step: {observed * 1e3:.3f}ms")
+
+    if args.measure_comm:
+        assert mesh is not None
+        fits = serve_fabric_fits(mesh, ops=(plan.op,), axes=("model",))
+        fab = MeasuredFabric(models=fits, name="measured_serve")
+        for key, fit in fits.items():
+            print(f"[serve] measured fit {key}: a={fit.a:.3e}s b={fit.b:.3e}s/B")
+        measured_plan = build_serve_plan(
+            cfg, param_specs(cfg), fab, {"model": tp},
+            batch_rows=args.slots, policy=args.policy, op=plan.op,
+            cache_dtype_bytes=cache_bytes, act_dtype_bytes=cache_bytes,
+        )
+        print(f"[serve] measured-fabric plan: {measured_plan.describe()}")
+        group_s = time_serve_groups(plan, mesh)
+        timer.group_times = group_s
+        print("[serve] per-group predicted vs measured:")
+        for line in group_comparison_lines(plan, group_s):
+            print("  " + line)
+
     if args.plan_out:
         path = plan.save(args.plan_out)
         print(f"[serve] serve plan written to {path}")

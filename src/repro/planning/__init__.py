@@ -38,7 +38,11 @@ from .serve import (
     ServePlan,
     build_serve_plan,
     decode_unit_costs,
+    group_comparison_lines,
     make_group_collective,
+    measure_serve_comm,
+    serve_fabric_fits,
+    time_serve_groups,
 )
 from .registry import (
     available_policies,
@@ -76,7 +80,11 @@ __all__ = [
     "ServePlan",
     "build_serve_plan",
     "decode_unit_costs",
+    "group_comparison_lines",
     "make_group_collective",
+    "measure_serve_comm",
+    "serve_fabric_fits",
+    "time_serve_groups",
     "available_policies",
     "build_schedule",
     "get_policy",

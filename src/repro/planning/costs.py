@@ -155,6 +155,23 @@ class MeasuredCosts:
         return cls.from_unit_times(base, bwd, fwd, name=name)
 
 
+def time_collective_call(f, x, repeats: int = 3) -> float:
+    """Warm a jitted collective once (the compiling call is discarded)
+    and return the min of ``repeats`` timed calls — the one latency
+    estimator shared by ``MeasuredComm.time_psums`` (train psums) and
+    ``planning.serve.measure_serve_comm`` (serve gathers/all-to-alls),
+    so compute- and comm-side measured costs stay directly comparable."""
+    import jax
+
+    jax.block_until_ready(f(x))  # compile + warm
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 #: Default psum size sweep: 4 KiB … 16 MiB in ×8 steps — small enough to
 #: expose α, large enough to pin β (the journal sweeps the same decades).
 DEFAULT_COMM_SWEEP = tuple(4 * 1024 * 8**i for i in range(6))
@@ -252,13 +269,7 @@ class MeasuredComm:
                     axis_names=set(axes), check_vma=False,
                 )
             )
-            jax.block_until_ready(f(x))  # compile + warm
-            best = float("inf")
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                jax.block_until_ready(f(x))
-                best = min(best, time.perf_counter() - t0)
-            times.append(best)
+            times.append(time_collective_call(f, x, repeats))
         return cls(
             sizes_bytes=tuple(int(s) for s in sizes_bytes),
             times_s=tuple(times), axes=tuple(axes), name=name,

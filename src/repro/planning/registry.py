@@ -88,6 +88,9 @@ def resolve_policy_name(name: str) -> str:
 
 
 def get_policy(name: str) -> PolicyFn:
+    """Look up a registered scheduler policy by (aliased) name.
+
+    Example: ``get_policy("mg_wfbp")(costs, ar_model, hw=TPU_V5E)``."""
     return _POLICIES[resolve_policy_name(name)]
 
 

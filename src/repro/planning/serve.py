@@ -139,11 +139,45 @@ class ServePlan:
     def policy(self) -> str:
         return self.provenance.get("policy", self.schedule.method)
 
+    def group_summaries(self) -> tuple[dict[str, Any], ...]:
+        """Per scheduled group: stage span, wire bytes, and the fabric's
+        predicted collective seconds (``a + b·M`` at the group's payload)
+        — the rows ``describe()`` renders and the serve benchmarks
+        compare measured gather times against."""
+        if self.schedule.result is None:
+            return ()
+        return tuple(
+            {
+                "stages": tr.layers,
+                "nbytes": tr.nbytes,
+                "t_pred_s": self.model(tr.nbytes),
+                "start_s": tr.start,
+                "finish_s": tr.finish,
+            }
+            for tr in self.schedule.result.groups
+        )
+
     def describe(self) -> str:
-        return (
+        """Human-readable plan summary including per-group predicted
+        collective times and wire bytes, so a ``--plan-out`` artifact is
+        reviewable without loading the JSON."""
+        head = (
             f"serve_plan[{self.policy}|{self.fabric}|{self.op}] "
             f"{self.schedule.describe()}"
         )
+        rows = self.group_summaries()
+        if not rows:
+            return head
+        lines = [head]
+        for g in rows:
+            lo, hi = g["stages"]
+            lines.append(
+                f"  group[{lo}..{hi}] wire={g['nbytes']}B "
+                f"t_pred={g['t_pred_s'] * 1e6:.1f}us "
+                f"start={g['start_s'] * 1e6:.1f}us "
+                f"finish={g['finish_s'] * 1e6:.1f}us"
+            )
+        return "\n".join(lines)
 
     # -- serialization (mirrors planning.Plan) ------------------------------
 
@@ -260,19 +294,36 @@ def build_serve_plan(
     op: Collective | str | None = None,
     policy_opts: dict[str, Any] | None = None,
     provenance: dict[str, str] | None = None,
+    cache_dtype_bytes: int = 2,
+    act_dtype_bytes: int = 2,
 ) -> ServePlan:
     """Cost vector + fabric + policy -> evaluated ServePlan.
 
     The collective defaults to the arch's dominant decode op
     (``all_to_all`` for MoE, ``all_gather`` otherwise); any registered
     fabric prices it — the same registry, the same merge math, training
-    and serving."""
+    and serving.  ``cache_dtype_bytes``/``act_dtype_bytes`` size the wire
+    payload: the production default is bf16 (2); pass 4 when pricing an
+    engine whose caches run fp32 (the reduced CPU engines) so measured
+    group collectives compare against the bytes the step actually ships.
+
+    Example::
+
+        cfg = get_config("tinyllama-1.1b")
+        plan = build_serve_plan(cfg, param_specs(cfg), "gpu_nccl",
+                                {"model": 8}, batch_rows=16)
+        print(plan.describe())          # per-group bytes + predicted times
+        run = make_group_collective(plan)   # the executable wire
+    """
     fab = get_fabric(fabric)
     if op is None:
         op = Collective.ALL_TO_ALL if cfg.moe is not None else Collective.ALL_GATHER
     op = Collective(op)
     model = fab.cost(op, axis_sizes)
-    costs = decode_unit_costs(cfg, param_shapes, batch_rows)
+    costs = decode_unit_costs(
+        cfg, param_shapes, batch_rows,
+        cache_dtype_bytes=cache_dtype_bytes, act_dtype_bytes=act_dtype_bytes,
+    )
     policy = resolve_policy_name(policy)
     schedule = build_schedule(
         policy, costs, model, hw=hw, t_f=0.0, **(policy_opts or {})
@@ -335,3 +386,134 @@ def make_group_collective(plan: ServePlan, axis: str | None = None):
         return outs
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Measured serve fabrics: time the real decode collectives
+# ---------------------------------------------------------------------------
+
+
+def measure_serve_comm(
+    mesh,
+    op: Collective | str = Collective.ALL_GATHER,
+    axes: tuple[str, ...] = ("model",),
+    sizes_bytes: tuple[int, ...] | None = None,
+    dtype=None,
+    repeats: int = 3,
+    name: str | None = None,
+):
+    """Time real serve collectives over a size sweep on ``mesh``'s axis.
+
+    The serve-side analogue of ``MeasuredComm.time_psums``: one jitted
+    ``shard_map`` collective per size (compile call discarded, min of
+    ``repeats`` kept).  ``sizes_bytes`` are the *message* bytes ``M`` the
+    ``ServePlan`` timeline prices — for ``all_gather`` the gathered
+    result (each rank contributes ``M/N``), for ``all_to_all`` the full
+    local volume — so the returned ``MeasuredComm``'s ``fit()`` is an
+    (α, β) model directly comparable to ``fabric.cost(op, axis_sizes)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..compat import shard_map
+    from .costs import DEFAULT_COMM_SWEEP, MeasuredComm, time_collective_call
+
+    if len(axes) != 1:
+        raise ValueError(f"serve collectives run over one axis, got {axes}")
+    op = Collective(op)
+    sizes_bytes = DEFAULT_COMM_SWEEP if sizes_bytes is None else tuple(sizes_bytes)
+    dtype = jnp.float32 if dtype is None else dtype
+    P = jax.sharding.PartitionSpec
+    axis = axes[0]
+    n = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    itemsize = np.dtype(dtype).itemsize
+    replicated_out = op in (Collective.ALL_REDUCE, Collective.ALL_GATHER)
+    times = []
+    for nb in sizes_bytes:
+        if op is Collective.ALL_GATHER:
+            x = jnp.ones((max(1, int(nb) // (itemsize * n)),), dtype)
+        else:
+            elems = max(n, int(nb) // itemsize)
+            elems -= elems % n
+            x = jnp.ones((n, elems // n), dtype) if op is Collective.ALL_TO_ALL \
+                else jnp.ones((elems,), dtype)
+
+        def body(v):
+            return issue(op, v, axis)
+
+        f = jax.jit(
+            shard_map(
+                body, mesh=mesh, in_specs=(P(),),
+                out_specs=P() if replicated_out else P(axis),
+                axis_names={axis}, check_vma=False,
+            )
+        )
+        times.append(time_collective_call(f, x, repeats))
+    return MeasuredComm(
+        sizes_bytes=tuple(int(s) for s in sizes_bytes),
+        times_s=tuple(times),
+        axes=tuple(axes),
+        name=name or f"{op.value}@{'+'.join(axes)}",
+    )
+
+
+def serve_fabric_fits(
+    mesh,
+    ops: tuple[Collective | str, ...] = (Collective.ALL_GATHER,),
+    axes: tuple[str, ...] = ("model",),
+    **kwargs: Any,
+) -> dict[str, AllReduceModel]:
+    """Op-specific measured fits keyed for ``fabric.MeasuredFabric``.
+
+    Times each op's sweep on ``mesh`` and returns
+    ``{'all_gather@model': AllReduceModel, ...}`` — drop the dict into
+    ``MeasuredFabric(models=...)`` (or ``.with_fits``) and the registry
+    prices serve plans from live decode-collective measurements, the
+    serve-side analogue of the ``CommRefitter`` loop::
+
+        fits = serve_fabric_fits(mesh, ops=("all_gather",))
+        fab = MeasuredFabric(models=fits, name="measured_serve")
+        plan = build_serve_plan(cfg, shapes, fab, {"model": 8}, batch_rows=4)
+    """
+    key = "+".join(sorted(axes))
+    return {
+        f"{Collective(op).value}@{key}": measure_serve_comm(
+            mesh, op, axes, **kwargs
+        ).fit()
+        for op in ops
+    }
+
+
+def group_comparison_lines(
+    plan: ServePlan, measured_s: tuple[float, ...]
+) -> list[str]:
+    """Render ``group[lo..hi] wire=..B pred=..us meas=..us`` rows pairing
+    ``group_summaries()`` with ``time_serve_groups`` output — the one
+    predicted-vs-measured table ``launch/serve.py --measure-comm`` and
+    ``examples/serve_decode.py`` both print."""
+    lines = []
+    for g, t_meas in zip(plan.group_summaries(), measured_s):
+        lo, hi = g["stages"]
+        lines.append(
+            f"group[{lo}..{hi}] wire={g['nbytes']}B "
+            f"pred={g['t_pred_s'] * 1e6:8.1f}us "
+            f"meas={t_meas * 1e6:8.1f}us"
+        )
+    return lines
+
+
+def time_serve_groups(
+    plan: ServePlan, mesh, *, axis: str | None = None, repeats: int = 3, dtype=None
+) -> tuple[float, ...]:
+    """Measured seconds per scheduled serve group: one real collective of
+    the plan's op at each group's exact wire payload, in schedule order —
+    what ``ServeTimer.group_times`` holds and the ``serve_exec``
+    benchmark compares against ``group_summaries()``'s predictions."""
+    if plan.schedule.result is None:
+        raise ValueError("plan has no evaluated timeline to read group bytes from")
+    sizes = tuple(max(1, tr.nbytes) for tr in plan.schedule.result.groups)
+    mc = measure_serve_comm(
+        mesh, plan.op, (axis or plan.axis,), sizes_bytes=sizes,
+        repeats=repeats, dtype=dtype, name="serve_groups",
+    )
+    return mc.times_s

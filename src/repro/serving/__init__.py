@@ -1,3 +1,27 @@
-from .engine import Request, ServingEngine
+"""Serving: continuous batching (``engine``) + plan-driven sharded TP
+decode (``sharded``) — the executable side of ``planning.ServePlan``."""
 
-__all__ = ["Request", "ServingEngine"]
+from .engine import Request, ServingEngine
+from .sharded import (
+    ServeTimer,
+    make_sharded_decode_step,
+    serving_cache_pspecs,
+    serving_param_pspecs,
+    shard_serving_state,
+    sharded_decode_fn,
+    stack_fresh_rows,
+    write_fresh_rows,
+)
+
+__all__ = [
+    "Request",
+    "ServeTimer",
+    "ServingEngine",
+    "make_sharded_decode_step",
+    "serving_cache_pspecs",
+    "serving_param_pspecs",
+    "shard_serving_state",
+    "sharded_decode_fn",
+    "stack_fresh_rows",
+    "write_fresh_rows",
+]

@@ -17,6 +17,7 @@ KV allocator is the production refinement and slots behind this API.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import TYPE_CHECKING, Callable
 
 import jax
@@ -29,10 +30,16 @@ from ..models.transformer import init_caches
 
 if TYPE_CHECKING:
     from ..planning.serve import ServePlan
+    from .sharded import ServeTimer
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: a prompt, a token budget, and the tokens
+    decoded so far.  ``submit`` it to a ``ServingEngine``; the engine
+    appends to ``generated`` every step and sets ``done`` when the budget
+    (or the engine's ``max_seq``) is reached."""
+
     rid: int
     prompt: np.ndarray  # (prompt_len,) int32 token ids
     max_new_tokens: int
@@ -44,15 +51,27 @@ class ServingEngine:
     """Synchronous-step continuous batching over fixed decode slots.
 
     ``plan`` is the frozen decode-side ``planning.ServePlan`` the engine
-    runs under: on a sharded mesh its schedule groups the per-stage
-    decode collectives (``planning.serve.make_group_collective``), and
-    its evaluated timeline is the engine's predicted per-step cost
-    (``predicted_step_time``).  Single-device engines still carry it for
-    provenance — ``launch/serve.py`` builds, reports, and serializes it.
+    runs under; its evaluated timeline is the engine's predicted per-step
+    cost (``predicted_step_time``).  With ``mesh=`` the engine *executes*
+    the plan: the decode step runs under ``shard_map`` over ``tp_axis``
+    and issues exactly one fused collective per scheduled serve group
+    (``serving.sharded`` — KV all-gathers for dense archs, expert
+    all-to-alls for MoE), token-for-token identical to the unsharded
+    path.  A ``ServeTimer`` passed as ``timer=`` records per-step wall
+    clock, closing the predicted-vs-observed loop
+    (``observed_step_time``).
 
     Token models feed prompts directly; ``input_mode == 'embeds'`` archs
     (audio/VLM stub frontends) route token ids through the model's
     embedding table — the same one-engine code path either way.
+
+    Example::
+
+        plan = build_serve_plan(cfg, param_specs(cfg), "tpu_v5e",
+                                {"model": 8}, batch_rows=4)
+        eng = ServingEngine(cfg, params, slots=4, plan=plan, mesh=mesh)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=16))
+        done = eng.run_to_completion()
     """
 
     def __init__(
@@ -64,15 +83,28 @@ class ServingEngine:
         max_seq: int = 512,
         sample: Callable[[jax.Array], jax.Array] | None = None,
         plan: "ServePlan | None" = None,
+        mesh=None,
+        tp_axis: str = "model",
+        timer: "ServeTimer | None" = None,
     ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.plan = plan
+        self.mesh = mesh
+        self.tp_axis = tp_axis
+        self.timer = timer
         self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
         self._prefill = jax.jit(make_prefill_step(cfg, None, max_seq=max_seq))
-        self._decode = jax.jit(make_decode_step(cfg, None))
+        if mesh is not None:
+            if plan is None:
+                raise ValueError("sharded serving (mesh=) requires a ServePlan")
+            from .sharded import sharded_decode_fn
+
+            self._decode = sharded_decode_fn(cfg, plan, mesh, tp_axis=tp_axis)
+        else:
+            self._decode = jax.jit(make_decode_step(cfg, None))
         self.caches = init_caches(cfg, batch=slots, max_seq=max_seq, dtype=jnp.float32)
         self.active: dict[int, Request] = {}  # slot -> request
         self.row_pos = np.zeros((slots,), np.int32)  # per-row next position
@@ -104,6 +136,12 @@ class ServingEngine:
             return None
         return self.plan.schedule.result.t_iter
 
+    def observed_step_time(self) -> float | None:
+        """Median measured decode-step seconds from the attached
+        ``ServeTimer`` (None without a timer or before any clean sample)
+        — the measured counterpart of ``predicted_step_time``."""
+        return self.timer.median() if self.timer is not None else None
+
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -127,6 +165,16 @@ class ServingEngine:
 
     def _splice(self, fresh, slot: int):
         """Copy a 1-row cache pytree into row ``slot`` of the engine cache."""
+        if self.mesh is not None:
+            # sharded decode leaves the caches replicated over the mesh;
+            # bring the single-device prefill rows (and, before the first
+            # decode, the freshly initialized caches) onto the same layout
+            # so the eager splice never mixes committed placements.  The
+            # whole-tree put runs only while the caches are still off-mesh.
+            sh = jax.NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+            fresh = jax.tree.map(lambda x: jax.device_put(x, sh), fresh)
+            if jax.tree.leaves(self.caches)[0].sharding != sh:
+                self.caches = jax.tree.map(lambda x: jax.device_put(x, sh), self.caches)
 
         def put(c, f):
             if c.ndim >= 2 and c.shape[0] == self.cfg.n_stages:
@@ -151,10 +199,18 @@ class ServingEngine:
         # per-row position vector is the next refinement.)
         pos = int(max(self.row_pos[s] for s in self.active))
         tokens = jnp.asarray(self.next_token[:, None])
-        logits, self.caches = self._decode(
+        t0 = time.perf_counter() if self.timer is not None else 0.0
+        out = self._decode(
             self.params, self.caches, self._decode_input(tokens),
             jnp.asarray(pos, jnp.int32),
         )
+        if self.mesh is not None:
+            logits, self.caches, _wire = out
+        else:
+            logits, self.caches = out
+        if self.timer is not None:
+            jax.block_until_ready((logits, self.caches))
+            self.timer.observe(time.perf_counter() - t0)
         sampled = np.asarray(self.sample(logits))
         for slot, req in list(self.active.items()):
             tok = int(sampled[slot])
