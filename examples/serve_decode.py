@@ -8,9 +8,11 @@ NCCL-class launch overhead merges them (Eq. 10: the merge gain IS α) —
 then runs the request batch through the one serving code path
 (``serving.ServingEngine``) twice: unsharded, and sharded over a virtual
 TP mesh where every scheduled serve group issues exactly one fused
-collective.  The tokens must match exactly, and the closing table shows
-each group's predicted collective time next to a real measured one
-(``planning.time_serve_groups``) — see docs/fabrics.md.
+collective.  The tokens must match exactly; the closing table leads
+with the calibrated fixed-vs-wire step decomposition (probed
+compute+dispatch + plan wire timeline — the honest predicted step) and
+shows each group's predicted collective time next to a real measured
+one (``planning.time_serve_groups``) — see docs/fabrics.md.
 
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b \\
         --fabric gpu_nccl --tokens 12
@@ -57,6 +59,9 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds params, prompts, and the engine's sampling "
+                         "key — the whole demo is reproducible per seed")
     args = ap.parse_args()
 
     # Plan differences are shown at the FULL arch scale (per-stage decode
@@ -81,7 +86,7 @@ def main():
               f"cost vector: only the fabric's (α, β) moved.")
 
     cfg = dataclasses.replace(get_reduced(args.arch), param_dtype=jnp.float32)
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
     tp = min(4, jax.device_count())
     mesh = make_mesh((tp,), ("model",))
     # the reduced engine runs fp32 caches: price the wire at 4 bytes/elem
@@ -94,9 +99,14 @@ def main():
         engine = ServingEngine(
             cfg, params, slots=args.slots,
             max_seq=args.prompt_len + args.tokens + 1, plan=plan,
-            mesh=mesh_arg, timer=ServeTimer(skip_first=1),
+            sample_seed=args.seed, mesh=mesh_arg,
+            timer=ServeTimer(skip_first=1),
         )
-        rng = np.random.default_rng(0)
+        # compile + probe before the timed loop: the printed tok/s and
+        # step times are steady-state dispatch, never compilation
+        engine.warmup()
+        engine.calibrate_plan()
+        rng = np.random.default_rng(args.seed)
         for rid in range(args.requests):
             engine.submit(Request(
                 rid=rid,
@@ -120,11 +130,17 @@ def main():
             match = base == {r.rid: r.generated for r in completed}
             print(f"tokens match unsharded run: {match}")
             obs = engine.observed_step_time()
-            pred = engine.predicted_step_time()
-            if obs is not None and pred is not None:
-                print(f"step: predicted {pred * 1e3:.3f}ms, observed {obs * 1e3:.3f}ms")
+            cal = engine.plan  # calibrated copy: wire + probed fixed term
+            pred = cal.predicted_step_time()
+            wire = cal.schedule.result.t_iter
+            print(f"step decomposition: fixed {cal.t_step_fixed * 1e3:.3f}ms "
+                  f"(compute+dispatch, probed) + wire {wire * 1e3:.3f}ms "
+                  f"(plan timeline) = {pred * 1e3:.3f}ms predicted")
+            if obs is not None:
+                print(f"observed step: {obs * 1e3:.3f}ms "
+                      f"(observed/predicted = {obs / pred:.2f}x)")
             print("per-group predicted vs measured collective:")
-            for line in group_comparison_lines(plan, time_serve_groups(plan, mesh)):
+            for line in group_comparison_lines(cal, time_serve_groups(cal, mesh)):
                 print("  " + line)
 
 

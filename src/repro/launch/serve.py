@@ -129,17 +129,25 @@ def main() -> None:
 
     sample = None
     if args.temperature > 0:
-        key_box = {"key": jax.random.PRNGKey(2)}
-
-        def sample(logits):
-            key_box["key"], sub = jax.random.split(key_box["key"])
-            return jax.random.categorical(sub, logits / args.temperature, axis=-1)
+        # two-arg (logits, key) form: the key threads through the jitted
+        # step's donated state, so sampling never forces a host round-trip
+        def sample(logits, key):
+            return jax.random.categorical(key, logits / args.temperature, axis=-1)
 
     timer = ServeTimer()
     engine = ServingEngine(
         cfg, params, slots=args.slots, max_seq=max_seq, sample=sample,
-        plan=plan, mesh=mesh if args.sharded else None, timer=timer,
+        sample_seed=2, plan=plan, mesh=mesh if args.sharded else None,
+        timer=timer,
     )
+
+    engine.warmup()  # compile the full-batch step before anything is timed
+    if plan.schedule.result is not None:
+        plan = engine.calibrate_plan()
+        wire = plan.schedule.result.t_iter
+        print(f"[serve] calibrated step: fixed={plan.t_step_fixed * 1e6:.1f}us"
+              f" + wire={wire * 1e6:.1f}us"
+              f" = {(plan.t_step_fixed + wire) * 1e6:.1f}us")
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         engine.submit(Request(

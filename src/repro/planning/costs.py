@@ -155,15 +155,18 @@ class MeasuredCosts:
         return cls.from_unit_times(base, bwd, fwd, name=name)
 
 
-def time_collective_call(f, x, repeats: int = 3) -> float:
-    """Warm a jitted collective once (the compiling call is discarded)
-    and return the min of ``repeats`` timed calls — the one latency
-    estimator shared by ``MeasuredComm.time_psums`` (train psums) and
-    ``planning.serve.measure_serve_comm`` (serve gathers/all-to-alls),
-    so compute- and comm-side measured costs stay directly comparable."""
+def time_collective_call(f, x, repeats: int = 3, warmup: int = 1) -> float:
+    """Run ``warmup`` discarded calls (the first compiles — compile time
+    must NEVER reach a timed sample, it would poison every (α, β) fit
+    min-of-N merely hides) and return the min of ``repeats`` timed calls
+    — the one latency estimator shared by ``MeasuredComm.time_psums``
+    (train psums) and ``planning.serve.measure_serve_comm`` (serve
+    gathers/all-to-alls), so compute- and comm-side measured costs stay
+    directly comparable."""
     import jax
 
-    jax.block_until_ready(f(x))  # compile + warm
+    for _ in range(max(1, warmup)):  # at least one: compile + warm
+        jax.block_until_ready(f(x))
     best = float("inf")
     for _ in range(max(1, repeats)):
         t0 = time.perf_counter()

@@ -117,6 +117,11 @@ class ServePlan:
       model:      affine (a, b) model of ``op`` on the fabric.
       hw:         hardware model converting cost flops to seconds.
       schedule:   the merge schedule over stages (with evaluated timeline).
+      t_step_fixed: measured per-step fixed (dispatch+compute) seconds —
+                  the startup term of the *step*, not the wire.  0.0
+                  until a probe fills it (``ServingEngine.calibrate_plan``
+                  / ``with_step_fixed``); ``predicted_step_time`` adds it
+                  to the wire timeline so predictions stay honest.
       provenance: string map — at least ``policy`` and ``fabric``.
     """
 
@@ -129,6 +134,7 @@ class ServePlan:
     model: AllReduceModel
     hw: Hardware
     schedule: Schedule
+    t_step_fixed: float = 0.0
     provenance: dict[str, str] = dataclasses.field(default_factory=dict)
 
     @property
@@ -139,11 +145,31 @@ class ServePlan:
     def policy(self) -> str:
         return self.provenance.get("policy", self.schedule.method)
 
+    def predicted_step_time(self) -> float | None:
+        """Modeled decode-step seconds: the evaluated wire timeline
+        (``schedule.result.t_iter``) plus the measured per-step fixed
+        term — the two-term cost model MG-WFBP's startup/bandwidth
+        decomposition suggests for the step itself.  None before the
+        schedule is evaluated."""
+        if self.schedule.result is None:
+            return None
+        return self.schedule.result.t_iter + self.t_step_fixed
+
+    def with_step_fixed(self, t_step_fixed: float) -> "ServePlan":
+        """A copy of this plan with the measured fixed (dispatch+compute)
+        per-step term installed (provenance records the source)."""
+        prov = dict(self.provenance)
+        prov["t_step_fixed_source"] = "probe"
+        return dataclasses.replace(
+            self, t_step_fixed=float(t_step_fixed), provenance=prov
+        )
+
     def group_summaries(self) -> tuple[dict[str, Any], ...]:
-        """Per scheduled group: stage span, wire bytes, and the fabric's
-        predicted collective seconds (``a + b·M`` at the group's payload)
-        — the rows ``describe()`` renders and the serve benchmarks
-        compare measured gather times against."""
+        """Per scheduled group: stage span, wire bytes, the fabric's
+        predicted collective seconds (``a + b·M`` at the group's
+        payload), and the plan-level fixed term (``t_fixed_s``, same on
+        every row) — the rows ``describe()`` renders and the serve
+        benchmarks compare measured gather times against."""
         if self.schedule.result is None:
             return ()
         return tuple(
@@ -151,6 +177,7 @@ class ServePlan:
                 "stages": tr.layers,
                 "nbytes": tr.nbytes,
                 "t_pred_s": self.model(tr.nbytes),
+                "t_fixed_s": self.t_step_fixed,
                 "start_s": tr.start,
                 "finish_s": tr.finish,
             }
@@ -158,13 +185,21 @@ class ServePlan:
         )
 
     def describe(self) -> str:
-        """Human-readable plan summary including per-group predicted
-        collective times and wire bytes, so a ``--plan-out`` artifact is
-        reviewable without loading the JSON."""
+        """Human-readable plan summary including the fixed-vs-wire step
+        decomposition and per-group predicted collective times and wire
+        bytes, so a ``--plan-out`` artifact is reviewable without
+        loading the JSON."""
         head = (
             f"serve_plan[{self.policy}|{self.fabric}|{self.op}] "
             f"{self.schedule.describe()}"
         )
+        if self.schedule.result is not None:
+            wire = self.schedule.result.t_iter
+            head += (
+                f" step=fixed {self.t_step_fixed * 1e6:.1f}us"
+                f" + wire {wire * 1e6:.1f}us"
+                f" = {(self.t_step_fixed + wire) * 1e6:.1f}us"
+            )
         rows = self.group_summaries()
         if not rows:
             return head
@@ -217,6 +252,7 @@ class ServePlan:
             "model": dataclasses.asdict(self.model),
             "hw": dataclasses.asdict(self.hw),
             "schedule": sched,
+            "t_step_fixed": self.t_step_fixed,
             "provenance": dict(self.provenance),
         }
 
@@ -263,6 +299,8 @@ class ServePlan:
                 method=d["schedule"]["method"],
                 result=result,
             ),
+            # optional: plans saved before the fixed-term model load as 0.0
+            t_step_fixed=float(d.get("t_step_fixed", 0.0)),
             provenance=dict(d["provenance"]),
         )
 
@@ -490,8 +528,18 @@ def group_comparison_lines(
     """Render ``group[lo..hi] wire=..B pred=..us meas=..us`` rows pairing
     ``group_summaries()`` with ``time_serve_groups`` output — the one
     predicted-vs-measured table ``launch/serve.py --measure-comm`` and
-    ``examples/serve_decode.py`` both print."""
+    ``examples/serve_decode.py`` both print.  A calibrated plan
+    (``t_step_fixed > 0``) leads with the fixed-vs-wire step
+    decomposition so the per-group wire rows read against the honest
+    whole-step prediction."""
     lines = []
+    if plan.t_step_fixed > 0 and plan.schedule.result is not None:
+        wire = plan.schedule.result.t_iter
+        lines.append(
+            f"step: fixed={plan.t_step_fixed * 1e6:8.1f}us "
+            f"wire={wire * 1e6:8.1f}us "
+            f"pred_total={(plan.t_step_fixed + wire) * 1e6:8.1f}us"
+        )
     for g, t_meas in zip(plan.group_summaries(), measured_s):
         lo, hi = g["stages"]
         lines.append(

@@ -8,6 +8,7 @@ from .sharded import (
     serving_cache_pspecs,
     serving_param_pspecs,
     shard_serving_state,
+    sharded_decode_core,
     sharded_decode_fn,
     stack_fresh_rows,
     write_fresh_rows,
@@ -18,6 +19,7 @@ __all__ = [
     "ServeTimer",
     "ServingEngine",
     "make_sharded_decode_step",
+    "sharded_decode_core",
     "serving_cache_pspecs",
     "serving_param_pspecs",
     "shard_serving_state",

@@ -187,15 +187,18 @@ def make_sharded_decode_step(cfg, plan: "ServePlan", *, tp_axis: str = "model"):
     return step
 
 
-def sharded_decode_fn(cfg, plan: "ServePlan", mesh, *, tp_axis: str = "model"):
-    """Jitted plan-driven decode step on a TP ``mesh``.
+def sharded_decode_core(cfg, plan: "ServePlan", mesh, *, tp_axis: str = "model"):
+    """Unjitted ``shard_map``-ped plan-driven decode step on a TP ``mesh``.
 
     ``fn(params, caches, batch, pos) -> (logits, caches, wire)`` — the
-    function ``ServingEngine`` installs as its decode when constructed
-    with ``mesh=``.  Engine state rides in replicated (the mirrored
-    compute needs full values per rank; see the module docstring), and
-    the lowered HLO contains exactly ``len(plan.schedule.groups)``
-    collective ops — pinned by the engine lowering test.
+    collective-issuing core ``ServingEngine`` embeds inside its ONE
+    jitted, buffer-donating step (so sampling and the masked state
+    updates trace into the same executable as the plan's collectives).
+    Engine state rides in replicated (the mirrored compute needs full
+    values per rank; see the module docstring), and the lowered HLO of
+    any step containing this core has exactly
+    ``len(plan.schedule.groups)`` collective ops — pinned by the engine
+    lowering test.
     """
     from ..compat import shard_map
 
@@ -205,12 +208,18 @@ def sharded_decode_fn(cfg, plan: "ServePlan", mesh, *, tp_axis: str = "model"):
     if not _attn_sublayers(cfg):
         n_wire = 0
     out_specs = (P(), P(), tuple(P(tp_axis) for _ in range(n_wire)))
-    return jax.jit(
-        shard_map(
-            step, mesh=mesh, in_specs=(P(), P(), P(), P()),
-            out_specs=out_specs, axis_names={tp_axis}, check_vma=False,
-        )
+    return shard_map(
+        step, mesh=mesh, in_specs=(P(), P(), P(), P()),
+        out_specs=out_specs, axis_names={tp_axis}, check_vma=False,
     )
+
+
+def sharded_decode_fn(cfg, plan: "ServePlan", mesh, *, tp_axis: str = "model"):
+    """``jax.jit(sharded_decode_core(...))`` — the standalone jitted
+    sharded decode step, for callers that want the plan-driven step
+    outside a ``ServingEngine`` (the engine itself jits the core inside
+    its donated whole-step function instead)."""
+    return jax.jit(sharded_decode_core(cfg, plan, mesh, tp_axis=tp_axis))
 
 
 # ---------------------------------------------------------------------------

@@ -210,21 +210,28 @@ SHARDED_EXEC_SCRIPT = textwrap.dedent("""
 
     base, _, _ = run(None, "mg_wfbp", "gpu_nccl")
     # the fabrics/policies pick different merge sets; every one must pin
-    # exactly one fused collective per group INSIDE the engine step and
-    # decode token-for-token identically to the unsharded engine
+    # exactly one fused collective per group INSIDE the engine's one
+    # jitted step, donate its DecodeState buffers, decode token-for-token
+    # identically to the unsharded engine, and never retrace the decode
+    # executable across joins, leaves, and slot reuse
+    # donation shows as tf.aliasing_output (single-device) or
+    # jax.buffer_donor (sharded args) in the lowered StableHLO
+    def donated(text):
+        return "tf.aliasing_output" in text or "jax.buffer_donor" in text
+
     for policy, fabric in (("mg_wfbp", "gpu_nccl"), ("wfbp", "gpu_nccl"),
                            ("synceasgd", "tpu_v5e")):
         toks, eng, plan = run(mesh, policy, fabric)
-        low = eng._decode.lower(eng.params, eng.caches,
-                                {"tokens": jnp.zeros((2, 1), jnp.int32)},
-                                jnp.asarray(0, jnp.int32))
-        stats = parse_collectives(low.as_text())
+        text = eng._step_fn.lower(eng.params, eng._state).as_text()
+        stats = parse_collectives(text)
         out["cells"].append({
             "policy": policy, "fabric": fabric, "op": plan.op,
             "n_groups": len(plan.schedule.groups),
             "gather_ops": stats.counts.get("all-gather", 0),
             "total_collectives": stats.total_ops,
             "tokens_match": toks == base,
+            "donated": donated(text),
+            "decode_execs": eng.compile_stats()["decode"],
         })
 
     # MoE: the plan schedules the expert all-to-all; same invariant
@@ -235,15 +242,14 @@ SHARDED_EXEC_SCRIPT = textwrap.dedent("""
                                 {"model": 4}, batch_rows=2, policy="wfbp")
     eng = ServingEngine(moe_cfg, moe_params, slots=2, max_seq=16,
                         plan=moe_plan, mesh=mesh)
-    low = eng._decode.lower(eng.params, eng.caches,
-                            {"tokens": jnp.zeros((2, 1), jnp.int32)},
-                            jnp.asarray(0, jnp.int32))
-    stats = parse_collectives(low.as_text())
+    text = eng._step_fn.lower(eng.params, eng._state).as_text()
+    stats = parse_collectives(text)
     out["moe"] = {
         "op": moe_plan.op,
         "n_groups": len(moe_plan.schedule.groups),
         "a2a_ops": stats.counts.get("all-to-all", 0),
         "total_collectives": stats.total_ops,
+        "donated": donated(text),
     }
 
     # at-rest layout: sharded leaves really live in 1/N-size shards
@@ -259,8 +265,12 @@ SHARDED_EXEC_SCRIPT = textwrap.dedent("""
 
 
 def test_engine_step_lowers_one_collective_per_group():
-    """Acceptance: ``ServingEngine.step`` on a virtual TP mesh lowers to
-    exactly one fused collective per ServePlan group, and the sharded
+    """Acceptance: the engine's ONE jitted step on a virtual TP mesh
+    lowers to exactly one fused collective per ServePlan group, donates
+    its ``DecodeState`` buffers (``tf.aliasing_output``/``jax.buffer_donor``
+    in the lowered text — the cache arena is updated in place), compiles
+    exactly one
+    decode executable across joins/leaves/slot reuse, and the sharded
     engine decodes token-for-token what the unsharded engine decodes."""
     out = subprocess.run(
         [sys.executable, "-c", SHARDED_EXEC_SCRIPT],
@@ -277,9 +287,63 @@ def test_engine_step_lowers_one_collective_per_group():
         assert c["gather_ops"] == c["n_groups"], c
         assert c["total_collectives"] == c["n_groups"], c  # nothing extra
         assert c["tokens_match"], c
+        assert c["donated"], c  # the DecodeState buffers alias outputs
+        assert c["decode_execs"] == 1, c  # zero steady-state retraces
     moe = rec["moe"]
     assert moe["op"] == "all_to_all"
     assert moe["a2a_ops"] == moe["n_groups"]
     assert moe["total_collectives"] == moe["n_groups"]
+    assert moe["donated"]
     # at-rest Megatron layout really shards the projection weights
     assert rec["wq_shard_fraction"] == pytest.approx(0.25)
+
+
+class TestStepFixedModel:
+    """The honest compute+dispatch cost model: ``t_step_fixed`` rides the
+    plan, survives JSON, and folds into ``predicted_step_time``."""
+
+    def _plan(self):
+        cfg = _reduced_cfg()
+        return build_serve_plan(cfg, param_specs(cfg), "tpu_v5e",
+                                {"model": 4}, batch_rows=2)
+
+    def test_with_step_fixed_and_prediction(self):
+        plan = self._plan()
+        assert plan.t_step_fixed == 0.0
+        assert plan.predicted_step_time() == plan.schedule.result.t_iter
+        cal = plan.with_step_fixed(1.5e-3)
+        assert cal.t_step_fixed == 1.5e-3
+        assert cal.predicted_step_time() == pytest.approx(
+            plan.schedule.result.t_iter + 1.5e-3)
+        assert cal.provenance["t_step_fixed_source"] == "probe"
+        # the original plan is untouched (frozen-value semantics)
+        assert plan.t_step_fixed == 0.0
+
+    def test_json_round_trip_and_legacy_load(self):
+        from repro.planning import ServePlan
+
+        cal = self._plan().with_step_fixed(2e-4)
+        rt = ServePlan.from_json_dict(json.loads(cal.to_json()))
+        assert rt.t_step_fixed == pytest.approx(2e-4)
+        assert rt.predicted_step_time() == pytest.approx(cal.predicted_step_time())
+        # artifacts written before the fixed-term model load as 0.0
+        d = json.loads(self._plan().to_json())
+        d.pop("t_step_fixed")
+        legacy = ServePlan.from_json_dict(d)
+        assert legacy.t_step_fixed == 0.0
+
+    def test_describe_and_group_summaries_carry_fixed(self):
+        from repro.planning import group_comparison_lines
+
+        cal = self._plan().with_step_fixed(1e-3)
+        assert "step=fixed" in cal.describe()
+        for g in cal.group_summaries():
+            assert g["t_fixed_s"] == pytest.approx(1e-3)
+        lines = group_comparison_lines(
+            cal, tuple(0.0 for _ in cal.schedule.groups))
+        assert lines[0].startswith("step: fixed=")
+        assert len(lines) == 1 + len(cal.schedule.groups)
+        # an uncalibrated plan keeps the legacy table shape
+        plain = group_comparison_lines(
+            self._plan(), tuple(0.0 for _ in self._plan().schedule.groups))
+        assert len(plain) == len(self._plan().schedule.groups)

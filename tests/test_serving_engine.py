@@ -1,5 +1,6 @@
 """Continuous-batching serving engine: correctness against single-request
-decoding and slot reuse."""
+decoding, slot reuse, and the dispatch-free-loop invariants (empty-step
+no-op, retirement as a masked write, bucketed admission compile counts)."""
 
 import dataclasses
 
@@ -44,3 +45,59 @@ def test_slot_reuse_after_completion():
     done = eng.run_to_completion()
     assert len(done) == 3  # third request reused a freed slot
     assert all(len(r.generated) == 4 for r in done)
+
+
+def test_empty_step_is_a_noop():
+    """With nothing admitted, ``step`` returns 0 and compiles nothing:
+    no decode executable, no dispatch, no collective."""
+    _, _, eng = make_engine(slots=2)
+    assert eng.step() == 0
+    assert eng.step() == 0
+    stats = eng.compile_stats()
+    assert stats["decode"] == 0
+    assert stats["admit"] == {}
+    assert stats["prefill"] == 0
+
+
+def test_mid_bucket_retirement_keeps_tokens_identical():
+    """A row retiring mid-batch is a masked mask-flip, not a reshape: the
+    surviving row's tokens match a solo decode exactly, and the decode
+    executable never recompiles across the retirement."""
+    prompt_short = np.arange(10, 18, dtype=np.int32)
+    prompt_long = np.arange(40, 48, dtype=np.int32)
+
+    cfg, params, eng = make_engine(slots=2)
+    eng.submit(Request(rid=1, prompt=prompt_short, max_new_tokens=3))
+    eng.submit(Request(rid=2, prompt=prompt_long, max_new_tokens=9))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert len(done[1]) == 3 and len(done[2]) == 9
+    assert eng.compile_stats()["decode"] == 1  # zero retraces across retirement
+
+    _, _, solo = make_engine(slots=1)
+    solo.submit(Request(rid=2, prompt=prompt_long, max_new_tokens=9))
+    assert done[2] == solo.run_to_completion()[0].generated
+
+
+def test_bucket_boundary_compiles_at_most_one_new_executable():
+    """Crossing an admission batch-bucket boundary (1-wide join vs a
+    multi-row join) compiles at most one new admit executable; the decode
+    executable stays at exactly one throughout."""
+    cfg, params, eng = make_engine(slots=4)
+    eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=6))
+    eng.step()  # 1-row admission: bucket 1
+    stats1 = eng.compile_stats()
+    assert stats1["admit"] == {1: 1}
+    assert stats1["decode"] == 1
+    for rid in (1, 2, 3):  # 3-row admission on the free slots: bucket 4
+        eng.submit(Request(rid=rid, prompt=np.arange(rid, rid + 8, dtype=np.int32),
+                           max_new_tokens=6))
+    eng.step()
+    stats2 = eng.compile_stats()
+    assert stats2["admit"] == {1: 1, 4: 1}  # exactly one new bucket
+    assert stats2["decode"] == 1
+    done = eng.run_to_completion()
+    assert len(done) == 4
+    # the whole run, joins and all, still holds the one-executable line
+    assert eng.compile_stats()["decode"] == 1
+    assert eng.compile_stats()["admit"] == {1: 1, 4: 1}
