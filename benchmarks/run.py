@@ -593,6 +593,193 @@ def wire_layout() -> list[str]:
     return rows
 
 
+def serve_resilience() -> list[str]:
+    """Chaos-injected serving acceptance -> ``BENCH_serve_resilience.json``.
+
+    Exercises the whole resilience layer end to end on the reduced arch:
+
+      * seeded kill sweep (``kill_every`` in 0/5/3): every chaos run must
+        finish with tokens bit-identical to the uninterrupted baseline,
+        and records restarts, mean recovery seconds (backoff + snapshot
+        restore + step re-warm) and goodput tok/s — the goodput floor is
+        asserted by the ``serve-chaos-smoke`` CI job;
+      * deadline cells on a fake clock (deterministic): one run that
+        sheds unmeetable requests at admission, one whose in-flight
+        request expires mid-generation with partial output;
+      * degraded-fabric replan: sustained injected slowdown drives the
+        StragglerMonitor -> serve (α, β) refit -> plan rebuild, and the
+        full-size planning cell pins that the degraded constants change
+        the merge decision itself (fewer, larger serve groups).
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, get_reduced
+    from repro.core.comm_model import AllReduceModel
+    from repro.launch.specs import param_specs
+    from repro.models.transformer import init_params
+    from repro.planning import build_serve_plan, rebuild_serve_plan
+    from repro.runtime import StragglerMonitor
+    from repro.serving import (
+        ChaosConfig,
+        ChaosInjector,
+        Request,
+        ServingEngine,
+        resilient_serve_loop,
+    )
+
+    rows = ["table=serve_resilience"]
+    records = []
+    cfg = _dc.replace(get_reduced("tinyllama-1.1b"), param_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    slots, prompt_len, n_tokens, n_requests = 2, 8, 8, 4
+    max_seq = prompt_len + n_tokens + 1
+
+    def make_engine(**kw):
+        kw.setdefault("slots", slots)
+        kw.setdefault("max_seq", max_seq)
+        return ServingEngine(cfg, params, **kw)
+
+    def submit_all(eng, deadlines=None):
+        rng = np.random.default_rng(0)
+        for rid in range(n_requests):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=prompt_len, dtype=np.int32),
+                max_new_tokens=n_tokens,
+                deadline_s=None if deadlines is None else deadlines[rid],
+            ))
+
+    import tempfile
+
+    # -- seeded kill sweep: recovery must be token-identical ---------------
+    baseline_tokens = None
+    for kill_every in (0, 5, 3):
+        eng = make_engine()
+        eng.warmup()
+        submit_all(eng)
+        chaos = (ChaosInjector(ChaosConfig(seed=7, kill_every=kill_every))
+                 if kill_every else None)
+        with tempfile.TemporaryDirectory() as snap_dir:
+            report = resilient_serve_loop(
+                eng, snapshot_dir=snap_dir, snapshot_every=2,
+                backoff_base_s=0.0, chaos=chaos,
+            )
+        tokens = {r.rid: r.generated for r in report.completed}
+        if baseline_tokens is None:
+            baseline_tokens = tokens
+        match = tokens == baseline_tokens
+        assert match, f"kill_every={kill_every}: tokens diverged after recovery"
+        mean_rec = (sum(report.recovery_times_s) / len(report.recovery_times_s)
+                    if report.recovery_times_s else 0.0)
+        records.append({
+            "case": "kill_sweep", "kill_every": kill_every,
+            "restarts": report.restarts,
+            "recovery_time_s": mean_rec,
+            "goodput_tok_s": report.goodput_tok_per_s,
+            "tokens_match": match,
+        })
+        rows.append(
+            f"kill_every={kill_every},restarts={report.restarts},"
+            f"recovery_s={mean_rec:.3f},"
+            f"goodput_tok_s={report.goodput_tok_per_s:.1f},tokens_match={match}"
+        )
+
+    # -- deadline shed/expire on a deterministic fake clock ----------------
+    class FakeClock:
+        def __init__(self, dt):
+            self.t, self.dt = 0.0, dt
+
+        def __call__(self):
+            self.t += self.dt
+            return self.t
+
+    # shed: deadlines already in the past at admission
+    eng = make_engine()
+    submit_all(eng, deadlines=[-1.0] * n_requests)
+    with tempfile.TemporaryDirectory() as snap_dir:
+        report = resilient_serve_loop(
+            eng, snapshot_dir=snap_dir, snapshot_every=100,
+            backoff_base_s=0.0, clock=FakeClock(0.25),
+        )
+    assert report.shed == n_requests
+    records.append({"case": "deadline_shed", "shed": report.shed,
+                    "expired": report.expired,
+                    "goodput_tokens": report.goodput_tokens})
+    rows.append(f"deadline_shed,shed={report.shed},expired={report.expired}")
+
+    # expire: one request's deadline lands mid-generation -> partial output
+    eng = make_engine()
+    submit_all(eng, deadlines=[1000.0, 4.0, 1000.0, 1000.0])
+    with tempfile.TemporaryDirectory() as snap_dir:
+        report = resilient_serve_loop(
+            eng, snapshot_dir=snap_dir, snapshot_every=100,
+            backoff_base_s=0.0, clock=FakeClock(0.25),
+        )
+    expired = [r for r in report.completed if r.expired]
+    assert len(expired) == 1 and 0 < len(expired[0].generated) < n_tokens
+    records.append({"case": "deadline_expire", "expired": report.expired,
+                    "partial_tokens": len(expired[0].generated),
+                    "max_new_tokens": n_tokens})
+    rows.append(f"deadline_expire,expired={report.expired},"
+                f"partial_tokens={len(expired[0].generated)}/{n_tokens}")
+
+    # -- degraded-fabric replan: loop-level + full-size merge shift --------
+    plan = build_serve_plan(cfg, param_specs(cfg), "tpu_v5e", {"model": 8},
+                            batch_rows=slots)
+    eng = make_engine(max_seq=128, plan=plan)
+    for rid in range(slots):
+        eng.submit(Request(rid=rid,
+                           prompt=np.arange(4, dtype=np.int32) + 1,
+                           max_new_tokens=40))
+    chaos = ChaosInjector(ChaosConfig(seed=3, slow_factor=30.0, slow_after=12))
+    with tempfile.TemporaryDirectory() as snap_dir:
+        report = resilient_serve_loop(
+            eng, snapshot_dir=snap_dir, snapshot_every=50,
+            backoff_base_s=0.0, chaos=chaos,
+            straggler=StragglerMonitor(window=16, factor=2.0, patience=2),
+        )
+    assert report.replans >= 1 and eng.plan.model.a > plan.model.a
+    records.append({
+        "case": "degraded_replan", "replans": report.replans,
+        "a_before": plan.model.a, "a_after": eng.plan.model.a,
+        "pred_step_before_s": plan.predicted_step_time(),
+        "pred_step_after_s": eng.plan.predicted_step_time(),
+    })
+    rows.append(f"degraded_replan,replans={report.replans},"
+                f"a={plan.model.a:.2e}->{eng.plan.model.a:.2e}")
+
+    # full-size arch, analytic only: the degraded wire changes the merge
+    # decision itself — MG-WFBP's merge set is a function of (a, b)
+    cfg_full = get_config("tinyllama-1.1b")
+    full = build_serve_plan(cfg_full, param_specs(cfg_full), "tpu_v5e",
+                            {"model": 8}, batch_rows=64)
+    degraded_model = AllReduceModel(a=full.model.a * 50, b=full.model.b * 10,
+                                    name="degraded")
+    shifted = rebuild_serve_plan(full, degraded_model)
+    assert len(shifted.schedule.groups) < len(full.schedule.groups)
+    records.append({
+        "case": "merge_shift", "arch": cfg_full.name,
+        "groups_before": len(full.schedule.groups),
+        "groups_after": len(shifted.schedule.groups),
+        "pred_step_before_s": full.predicted_step_time(),
+        "pred_step_after_s": shifted.predicted_step_time(),
+    })
+    rows.append(f"merge_shift,groups={len(full.schedule.groups)}->"
+                f"{len(shifted.schedule.groups)},"
+                f"pred_s={full.predicted_step_time():.2e}->"
+                f"{shifted.predicted_step_time():.2e}")
+
+    out = pathlib.Path(__file__).parent / "results" / "BENCH_serve_resilience.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(records, indent=1))
+    rows.append(f"wrote {out}")
+    return rows
+
+
 def main() -> None:
     from benchmarks.paper_tables import ALL_TABLES
 
@@ -603,7 +790,7 @@ def main() -> None:
 
     tables = list(ALL_TABLES) + [
         planning_sweep, wire_layout, tuner, fabric_sweep, serve_exec,
-        roofline_summary,
+        serve_resilience, roofline_summary,
     ]
     if args.only:
         wanted = {n.strip() for n in args.only.split(",")}

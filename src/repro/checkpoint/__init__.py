@@ -1,5 +1,6 @@
 from .checkpoint import (
     AsyncCheckpointer,
+    available_steps,
     latest_step,
     load_plan,
     load_tuner_state,
@@ -10,6 +11,7 @@ from .checkpoint import (
 
 __all__ = [
     "AsyncCheckpointer",
+    "available_steps",
     "latest_step",
     "load_plan",
     "load_tuner_state",

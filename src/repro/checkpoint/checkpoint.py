@@ -138,16 +138,27 @@ def load_tuner_state(directory: str | pathlib.Path, step: int) -> dict | None:
     return json.loads(path.read_text())
 
 
-def latest_step(directory: str | pathlib.Path) -> int | None:
+def available_steps(directory: str | pathlib.Path) -> list[int]:
+    """All *complete* checkpoint steps in ``directory``, ascending.
+
+    A checkpoint is complete when its final (renamed) directory holds a
+    manifest — ``.tmp`` directories from a write killed mid-flight are
+    ignored.  The serve-side restore path walks this list newest-first so
+    a corrupted latest snapshot falls back to an older complete one."""
     directory = pathlib.Path(directory)
     if not directory.exists():
-        return None
+        return []
     steps = []
     for p in directory.iterdir():
         if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp"):
             if (p / _MANIFEST).exists():  # complete checkpoints only
                 steps.append(int(p.name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str | pathlib.Path, step: int, like: Pytree, shardings: Pytree | None = None) -> tuple[Pytree, dict]:

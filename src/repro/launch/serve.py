@@ -51,6 +51,8 @@ if "--sharded" in sys.argv or "--measure-comm" in sys.argv:
 
 import argparse
 import dataclasses
+import signal
+import tempfile
 import time
 
 import jax
@@ -69,7 +71,15 @@ from ..planning import (
     serve_fabric_fits,
     time_serve_groups,
 )
-from ..serving import Request, ServeTimer, ServingEngine
+from ..runtime import StragglerMonitor
+from ..serving import (
+    ChaosConfig,
+    ChaosInjector,
+    Request,
+    ServeTimer,
+    ServingEngine,
+    resilient_serve_loop,
+)
 
 
 def main() -> None:
@@ -100,6 +110,28 @@ def main() -> None:
                          "(implies --sharded's mesh)")
     ap.add_argument("--plan-out", default=None,
                     help="write the ServePlan JSON here")
+    # resilience: any of these routes the run through resilient_serve_loop
+    ap.add_argument("--chaos-kill-every", type=int, default=0,
+                    help="inject a deterministic kill every N serve steps "
+                         "(0 = off); the loop must recover token-identically")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos fault schedule")
+    ap.add_argument("--chaos-slow-factor", type=float, default=1.0,
+                    help="multiply observed step/collective times by this "
+                         "once --chaos-slow-after is reached (degraded wire)")
+    ap.add_argument("--chaos-slow-after", type=int, default=None,
+                    help="serve step after which the injected slowdown starts")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO: deadline = now + this; expired "
+                         "requests retire with partial output, unmeetable "
+                         "waiting requests are shed")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="serve snapshot cadence in steps")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="serve snapshot directory (temp dir when resilience "
+                         "is active and this is unset)")
+    ap.add_argument("--max-restarts", type=int, default=5,
+                    help="restart budget for the resilient serve loop")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -148,17 +180,99 @@ def main() -> None:
         print(f"[serve] calibrated step: fixed={plan.t_step_fixed * 1e6:.1f}us"
               f" + wire={wire * 1e6:.1f}us"
               f" = {(plan.t_step_fixed + wire) * 1e6:.1f}us")
-    rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        engine.submit(Request(
-            rid=rid,
-            prompt=rng.integers(0, cfg.vocab, size=args.prompt_len, dtype=np.int32),
-            max_new_tokens=args.tokens,
-        ))
+    resilient = (
+        args.chaos_kill_every > 0
+        or args.chaos_slow_factor != 1.0
+        or args.deadline_ms is not None
+        or args.snapshot_dir is not None
+    )
 
-    t0 = time.time()
-    completed = engine.run_to_completion()
-    dt = time.time() - t0
+    def submit_all(eng, deadline_s=None):
+        rng = np.random.default_rng(0)
+        for rid in range(args.requests):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=args.prompt_len,
+                                    dtype=np.int32),
+                max_new_tokens=args.tokens,
+                deadline_s=deadline_s,
+            ))
+
+    if resilient:
+        baseline_tokens = None
+        if args.chaos_kill_every > 0 and args.deadline_ms is None:
+            # uninterrupted reference run: the chaos run must reproduce it
+            ref = ServingEngine(
+                cfg, params, slots=args.slots, max_seq=max_seq, sample=sample,
+                sample_seed=2, plan=plan, mesh=mesh if args.sharded else None,
+            )
+            submit_all(ref)
+            baseline_tokens = {
+                r.rid: r.generated for r in ref.run_to_completion()
+            }
+
+        chaos = ChaosInjector(ChaosConfig(
+            seed=args.chaos_seed,
+            kill_every=args.chaos_kill_every,
+            slow_factor=args.chaos_slow_factor,
+            slow_after=args.chaos_slow_after,
+        ))
+        straggler = (
+            StragglerMonitor(window=16, factor=2.0, patience=2)
+            if args.chaos_slow_factor != 1.0 else None
+        )
+        snap_dir = args.snapshot_dir or tempfile.mkdtemp(prefix="serve_snap_")
+        deadline_s = (
+            time.monotonic() + args.deadline_ms / 1e3
+            if args.deadline_ms is not None else None
+        )
+        submit_all(engine, deadline_s=deadline_s)
+
+        # graceful SIGINT: first ^C snapshots and exits cleanly; the
+        # loop's own handler re-raises a second one immediately
+        stop = {"flag": False}
+
+        def _sigint(signum, frame):
+            print("[serve] SIGINT: snapshotting before exit...")
+            stop["flag"] = True
+
+        prev_handler = signal.signal(signal.SIGINT, _sigint)
+        t0 = time.time()
+        try:
+            report = resilient_serve_loop(
+                engine,
+                snapshot_dir=snap_dir,
+                snapshot_every=args.snapshot_every,
+                max_restarts=args.max_restarts,
+                chaos=chaos,
+                straggler=straggler,
+                stop_flag=lambda: stop["flag"],
+            )
+        finally:
+            signal.signal(signal.SIGINT, prev_handler)
+        dt = time.time() - t0
+        completed = report.completed
+
+        mean_rec = (
+            sum(report.recovery_times_s) / len(report.recovery_times_s)
+            if report.recovery_times_s else 0.0
+        )
+        tokens_match = ""
+        if baseline_tokens is not None:
+            got = {r.rid: r.generated for r in completed}
+            tokens_match = f" tokens_match={got == baseline_tokens}"
+        print(f"[serve] resilience: restarts={report.restarts} "
+              f"recovery_mean_s={mean_rec:.3f} snapshots={report.snapshots} "
+              f"fallbacks={report.snapshot_fallbacks} shed={report.shed} "
+              f"expired={report.expired} replans={report.replans} "
+              f"interrupted={report.interrupted} "
+              f"goodput_tok_s={report.goodput_tok_per_s:.1f}"
+              f"{tokens_match} (snapshots in {snap_dir})")
+    else:
+        submit_all(engine)
+        t0 = time.time()
+        completed = engine.run_to_completion()
+        dt = time.time() - t0
     n_tok = sum(len(r.generated) for r in completed)
     mode = f"sharded TP={tp}" if args.sharded else "unsharded"
     print(f"[serve] {len(completed)} requests, {n_tok} tokens in {dt:.2f}s "

@@ -41,6 +41,9 @@ from .serve import (
     group_comparison_lines,
     make_group_collective,
     measure_serve_comm,
+    rebuild_serve_plan,
+    refit_serve_fit,
+    serve_collective_time_fn,
     serve_fabric_fits,
     time_serve_groups,
 )
@@ -83,6 +86,9 @@ __all__ = [
     "group_comparison_lines",
     "make_group_collective",
     "measure_serve_comm",
+    "rebuild_serve_plan",
+    "refit_serve_fit",
+    "serve_collective_time_fn",
     "serve_fabric_fits",
     "time_serve_groups",
     "available_policies",

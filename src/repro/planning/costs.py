@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Protocol, runtime_checkable
+from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -155,6 +155,44 @@ class MeasuredCosts:
         return cls.from_unit_times(base, bwd, fwd, name=name)
 
 
+#: A timed probe this many times slower than the running min is treated
+#: as an outlier (GC pause, noisy neighbor) and re-taken rather than
+#: recorded — see ``min_of_k``.
+PROBE_OUTLIER_FACTOR = 10.0
+
+
+def min_of_k(
+    sample_fn: Callable[[], float],
+    repeats: int,
+    *,
+    outlier_factor: float = PROBE_OUTLIER_FACTOR,
+    max_retries: int | None = None,
+) -> float:
+    """Min of ``repeats`` samples with an outlier retry.
+
+    A sample exceeding ``outlier_factor`` × the running min is discarded
+    and re-taken (a GC pause or noisy neighbor would otherwise burn one
+    of the ``repeats`` slots and, with small ``repeats``, silently skew
+    the calibration the sample feeds — ``t_step_fixed``, (α, β) fits).
+    Retries are bounded by ``max_retries`` (default ``repeats``) so a
+    *genuine* sustained slowdown is reported, not spun on: once the
+    budget is spent every sample counts.  Shared by
+    ``time_collective_call`` and ``ServingEngine.probe_step_time``.
+    """
+    repeats = max(1, repeats)
+    budget = repeats if max_retries is None else max(0, max_retries)
+    best = float("inf")
+    taken = retried = 0
+    while taken < repeats:
+        t = float(sample_fn())
+        if t > outlier_factor * best and retried < budget:
+            retried += 1
+            continue
+        best = min(best, t)
+        taken += 1
+    return best
+
+
 def time_collective_call(f, x, repeats: int = 3, warmup: int = 1) -> float:
     """Run ``warmup`` discarded calls (the first compiles — compile time
     must NEVER reach a timed sample, it would poison every (α, β) fit
@@ -162,17 +200,20 @@ def time_collective_call(f, x, repeats: int = 3, warmup: int = 1) -> float:
     — the one latency estimator shared by ``MeasuredComm.time_psums``
     (train psums) and ``planning.serve.measure_serve_comm`` (serve
     gathers/all-to-alls), so compute- and comm-side measured costs stay
-    directly comparable."""
+    directly comparable.  Samples run through ``min_of_k``: a probe 10×
+    slower than the running min is re-taken, so one scheduler hiccup
+    cannot poison a 3-sample calibration."""
     import jax
 
     for _ in range(max(1, warmup)):  # at least one: compile + warm
         jax.block_until_ready(f(x))
-    best = float("inf")
-    for _ in range(max(1, repeats)):
+
+    def sample() -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(f(x))
-        best = min(best, time.perf_counter() - t0)
-    return best
+        return time.perf_counter() - t0
+
+    return min_of_k(sample, repeats)
 
 
 #: Default psum size sweep: 4 KiB … 16 MiB in ×8 steps — small enough to

@@ -426,6 +426,84 @@ def make_group_collective(plan: ServePlan, axis: str | None = None):
     return run
 
 
+def rebuild_serve_plan(
+    plan: ServePlan,
+    model: AllReduceModel,
+    *,
+    policy: str | None = None,
+    trigger: str = "degraded_fabric",
+) -> ServePlan:
+    """Re-plan an existing ``ServePlan`` at a new (α, β) — the
+    degraded-fabric replan.
+
+    The cost vector, hardware model, and policy are reused unchanged;
+    only the collective model is swapped and the merge schedule re-solved
+    — MG-WFBP's merge decision is a function of (α, β), so when the wire
+    slows down (a flaky link, congestion, a failed NIC renegotiating
+    speed) the *merge set itself* must be allowed to change, not just the
+    predicted times (pinned by ``tests/test_resilience.py``).  The
+    measured ``t_step_fixed`` carries over — degradation is modeled on
+    the wire, the compute+dispatch term is untouched.  Provenance records
+    the trigger and the model it replaced so a ``--plan-out`` artifact
+    shows the replan happened.
+
+    ``serving.resilience.resilient_serve_loop`` calls this when its
+    ``StragglerMonitor`` flags sustained step-time degradation, with
+    ``model`` coming from ``refit_serve_fit`` (live probes through
+    ``serve_collective_time_fn`` on a real mesh, or the chaos-wrapped
+    analytic pricing in tests)."""
+    pol = resolve_policy_name(policy or plan.policy)
+    schedule = build_schedule(pol, list(plan.costs), model, hw=plan.hw, t_f=0.0)
+    prov = dict(plan.provenance)
+    prov.update({
+        "policy": pol,
+        "refit": trigger,
+        "replaced_model": plan.model.name or "",
+    })
+    return dataclasses.replace(
+        plan, model=model, schedule=schedule, provenance=prov
+    )
+
+
+def refit_serve_fit(
+    time_fn,
+    probe_sizes: tuple[int, ...] | None = None,
+    name: str = "serve_refit",
+) -> AllReduceModel:
+    """Slim serve-side (α, β) re-fit — the ``CommRefitter`` pattern
+    applied through the serve wire.
+
+    ``time_fn(nbytes) -> seconds`` prices one collective at one message
+    size; a few probe sizes (``SLIM_COMM_SWEEP`` by default: one small
+    for α, one large for β) are timed and least-squares fitted.  Pass
+    ``serve_collective_time_fn(mesh, op)`` for live measurements, or any
+    injectable stand-in (``ChaosInjector.wrap_time_fn`` in tests) — the
+    same seam ``planning.tuner.CommRefitter`` uses on the train side."""
+    from ..core.comm_model import fit_affine
+
+    from .costs import SLIM_COMM_SWEEP
+
+    sizes = tuple(int(s) for s in (probe_sizes or SLIM_COMM_SWEEP))
+    return fit_affine(
+        sizes, tuple(float(time_fn(s)) for s in sizes), name=name
+    )
+
+
+def serve_collective_time_fn(mesh, op: Collective | str, axis: str = "model",
+                             repeats: int = 3):
+    """``time_fn(nbytes) -> seconds`` pricing one real serve collective on
+    ``mesh`` — the production probe behind ``refit_serve_fit`` (the
+    serve-side ``psum_time_fn``)."""
+    op = Collective(op)
+
+    def fn(nbytes: int) -> float:
+        return measure_serve_comm(
+            mesh, op, (axis,), sizes_bytes=(int(nbytes),), repeats=repeats
+        ).times_s[0]
+
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Measured serve fabrics: time the real decode collectives
 # ---------------------------------------------------------------------------

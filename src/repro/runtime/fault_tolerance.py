@@ -27,6 +27,7 @@ container) simulate failures exactly.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import statistics
 import time
 from typing import Any, Callable
@@ -34,6 +35,8 @@ from typing import Any, Callable
 from ..checkpoint import AsyncCheckpointer, latest_step, restore
 
 Pytree = Any
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -89,6 +92,8 @@ def resilient_loop(
     checkpoint_dir: str,
     checkpoint_every: int = 50,
     max_restarts: int = 5,
+    backoff_base_s: float = 0.05,
+    sleep_fn: Callable[[float], None] = time.sleep,
     fault_injector: Callable[[int], None] | None = None,
     straggler: StragglerMonitor | None = None,
     on_straggler: Callable[[RunState], RunState] | None = None,
@@ -106,6 +111,16 @@ def resilient_loop(
     ``on_restart(state)`` runs after every restore (including restarts
     from scratch) — the elasticity hook where the launcher re-plans the
     gradient-merge schedule for the post-failure cluster shape.
+
+    Failure handling: every failure logs the full traceback with the
+    failing step before the restore; ``KeyboardInterrupt``/``SystemExit``
+    are never swallowed (an operator Ctrl-C must stop the run, not
+    restart it); restarts back off exponentially
+    (``backoff_base_s * 2**(restarts-1)``, ``sleep_fn`` injectable so
+    tests pin the schedule without sleeping); and the ``restarts``
+    counter saved in every checkpoint's ``extra`` dict is folded back in
+    on restore, so the count — and the ``max_restarts`` budget — survive
+    process death instead of resetting with each new process.
 
     ``plan_provider()`` returns the *currently active* ``planning.Plan``
     (or None); it is called at every checkpoint so the plan JSON lands
@@ -139,10 +154,18 @@ def resilient_loop(
                     plan=plan_provider() if plan_provider is not None else None,
                     tuner=tuner_provider() if tuner_provider is not None else None,
                 )
+        except (KeyboardInterrupt, SystemExit):
+            raise  # operator interrupts stop the run, never restart it
         except Exception:
+            log.exception(
+                "train step %d failed; restart %d/%d from latest checkpoint",
+                state.step, restarts + 1, max_restarts,
+            )
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if backoff_base_s > 0:
+                sleep_fn(backoff_base_s * 2 ** (restarts - 1))
             ckpt.wait()
             step = latest_step(checkpoint_dir)
             if step is None:
@@ -153,6 +176,11 @@ def resilient_loop(
                 continue
             fresh = init_state()
             tree, extra = restore(checkpoint_dir, step, fresh.checkpoint_tree())
+            # restart counts survive process death: the checkpoint's saved
+            # counter (+1 for the failure just handled) floors this
+            # session's count, so max_restarts budgets the run, not the
+            # process
+            restarts = max(restarts, int(extra.get("restarts", 0)) + 1)
             state = RunState(
                 step=step,
                 params=tree["params"],

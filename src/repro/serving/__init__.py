@@ -1,7 +1,23 @@
 """Serving: continuous batching (``engine``) + plan-driven sharded TP
-decode (``sharded``) — the executable side of ``planning.ServePlan``."""
+decode (``sharded``) — the executable side of ``planning.ServePlan`` —
+plus the resilience layer (``resilience``): snapshot/restore, seeded
+chaos injection, the restart serve loop, and degraded-fabric
+replanning."""
 
 from .engine import Request, ServingEngine
+from .resilience import (
+    ChaosConfig,
+    ChaosError,
+    ChaosInjector,
+    EngineSnapshot,
+    ServeReport,
+    latest_snapshot,
+    load_snapshot,
+    resilient_serve_loop,
+    restore_latest_snapshot,
+    save_snapshot,
+    snapshot_engine,
+)
 from .sharded import (
     ServeTimer,
     make_sharded_decode_step,
@@ -15,9 +31,20 @@ from .sharded import (
 )
 
 __all__ = [
+    "ChaosConfig",
+    "ChaosError",
+    "ChaosInjector",
+    "EngineSnapshot",
     "Request",
+    "ServeReport",
     "ServeTimer",
     "ServingEngine",
+    "latest_snapshot",
+    "load_snapshot",
+    "resilient_serve_loop",
+    "restore_latest_snapshot",
+    "save_snapshot",
+    "snapshot_engine",
     "make_sharded_decode_step",
     "sharded_decode_core",
     "serving_cache_pspecs",

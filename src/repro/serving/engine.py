@@ -55,13 +55,25 @@ class Request:
     """One generation request: a prompt, a token budget, and the tokens
     decoded so far.  ``submit`` it to a ``ServingEngine``; the engine
     appends to ``generated`` every step and sets ``done`` when the budget
-    (or the engine's ``max_seq``) is reached."""
+    (or the engine's ``max_seq``) is reached.
+
+    ``deadline_s`` is an absolute per-request SLO on the serving loop's
+    clock (``serving.resilience.resilient_serve_loop``): an *active*
+    request past its deadline retires gracefully with the tokens decoded
+    so far (``expired=True``, partial ``generated``); a *waiting* request
+    whose predicted completion (``ServePlan.predicted_step_time()`` ×
+    remaining budget) misses the deadline is never admitted
+    (``shed=True``, empty ``generated``) — load shedding at admission
+    instead of wasted decode steps."""
 
     rid: int
     prompt: np.ndarray  # (prompt_len,) int32 token ids
     max_new_tokens: int
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline_s: float | None = None
+    expired: bool = False
+    shed: bool = False
 
 
 def _cache_size(fn) -> int:
@@ -252,18 +264,25 @@ class ServingEngine:
         """Min-of-``repeats`` wall seconds of the compiled engine step on
         a throwaway state chain (every slot active) — the whole-step
         measurement ``measure_step_fixed`` decomposes.  Compilation is
-        warmed first and never timed."""
+        warmed first and never timed; samples run through the shared
+        outlier-retrying ``planning.costs.min_of_k`` so one GC pause or
+        noisy neighbor cannot skew the ``t_step_fixed`` calibration."""
+        from ..planning.costs import min_of_k
+
         state = _copy_state(self._state)
         state["active"] = jnp.ones_like(state["active"])
         state, s, _ = self._step_fn(self.params, state)  # warm
         jax.block_until_ready(s)
-        best = float("inf")
-        for _ in range(max(1, repeats)):
+        chain = [state]
+
+        def sample() -> float:
             t0 = time.perf_counter()
-            state, s, _ = self._step_fn(self.params, state)
-            jax.block_until_ready((state, s))
-            best = min(best, time.perf_counter() - t0)
-        return best
+            new_state, tok, _ = self._step_fn(self.params, chain[0])
+            jax.block_until_ready((new_state, tok))
+            chain[0] = new_state
+            return time.perf_counter() - t0
+
+        return min_of_k(sample, max(1, repeats))
 
     def measure_step_fixed(self, repeats: int = 5) -> float:
         """The measured per-step *fixed* (dispatch+compute) seconds: the
@@ -286,6 +305,70 @@ class ServingEngine:
             raise ValueError("calibrate_plan requires a ServePlan")
         self.plan = self.plan.with_step_fixed(self.measure_step_fixed(repeats))
         return self.plan
+
+    def install_plan(self, plan: "ServePlan") -> None:
+        """Swap in a (re)built ``ServePlan`` — the degraded-fabric replan
+        hook.  On an unsharded engine the plan is advisory (predictions,
+        shedding); on a sharded engine the decode step *executes* the
+        plan's merge schedule, so the step function is rebuilt and
+        recompiles on the next step — acceptable for a rare replan, and
+        the only way the wire actually changes shape."""
+        self.plan = plan
+        if self.mesh is not None:
+            from .sharded import sharded_decode_core
+
+            core = sharded_decode_core(self.cfg, plan, self.mesh,
+                                       tp_axis=self.tp_axis)
+            self._step_fn = jax.jit(self._make_step(core), donate_argnums=(1,))
+
+    def retire(self, slot: int, *, expired: bool = False) -> Request:
+        """Retire an active row before its budget is spent (deadline
+        expiry): the request keeps its partial ``generated`` output, the
+        slot's device mask bit flips off (a masked write, never a
+        reshape), and the slot frees for the next admission."""
+        req = self.active.pop(slot)
+        req.done = True
+        req.expired = expired
+        self.completed.append(req)
+        state = dict(self._state)
+        state["active"] = state["active"].at[slot].set(False)
+        self._state = state
+        return req
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def snapshot(self, step: int = 0) -> "Any":
+        """Host-side ``EngineSnapshot`` of the full decode state — the
+        cache arena, row positions, next tokens, masks, budgets, both
+        PRNG keys — plus the pending/in-flight/completed request queues
+        (``serving.resilience.snapshot_engine``).  Save it with
+        ``serving.resilience.save_snapshot`` (the checkpoint subsystem's
+        atomic-rename machinery) and resume with ``restore_snapshot``:
+        decoding continues token-for-token identical to an uninterrupted
+        run — the serve-side analogue of ``RunState.checkpoint_tree()``."""
+        from .resilience import snapshot_engine
+
+        return snapshot_engine(self, step)
+
+    def restore_snapshot(self, snap: "Any") -> None:
+        """Install an ``EngineSnapshot``: device state re-placed (under
+        the engine's mesh sharding when sharded), request queues and host
+        mirrors rebuilt.  The engine must have been constructed with the
+        same config/slots/max_seq the snapshot was taken under (the
+        snapshot carries them for validation).  After a restore the next
+        ``step()`` continues exactly where the snapshot left off."""
+        snap.validate_against(self)
+        state = jax.tree.map(jnp.asarray, snap.state)
+        if self.mesh is not None:
+            sh = jax.NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+            state = jax.tree.map(lambda x: jax.device_put(x, sh), state)
+        self._state = state
+        self._admit_key = jnp.asarray(snap.admit_key)
+        from .resilience import requests_from_snapshot
+
+        self.active, self.waiting, self.completed = requests_from_snapshot(snap)
+        self.row_pos = np.asarray(snap.row_pos, np.int32).copy()
+        self.next_token = np.asarray(snap.next_token, np.int32).copy()
 
     def compile_stats(self) -> dict[str, Any]:
         """Executable counts per engine entry point: ``decode`` (the one

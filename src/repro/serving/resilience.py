@@ -1,0 +1,637 @@
+"""Serving resilience: snapshot/restore, chaos injection, the restart
+loop, and degraded-fabric replanning.
+
+MG-WFBP's merged buckets make collectives fewer and *larger*, so one
+slow or dead participant stalls the whole decode step — the serving
+fleet's version of the straggler problem the training side already
+handles with ``resilient_loop`` + ``StragglerMonitor`` + ``CommRefitter``
+(journal arXiv 1912.09268: re-fit the (α, β) comm model online when the
+network changes).  This module is the serve-side counterpart, built from
+four pieces wired through the whole stack:
+
+* **EngineSnapshot** — the full ``DecodeState`` (KV cache arena, row
+  positions, next tokens, active mask, budgets, sampling PRNG key) plus
+  the admission key and every request queue (active/waiting/completed),
+  serialized through the checkpoint subsystem's atomic-rename machinery.
+  ``ServingEngine.restore_snapshot`` resumes **token-for-token
+  identical** decoding — the serve analogue of
+  ``RunState.checkpoint_tree()``.
+* **ChaosInjector** — deterministic, seeded fault injection at the
+  engine's existing seams: step-raise kills (the
+  ``fault_injector(step)`` contract of ``runtime.fault_tolerance``),
+  collective slowdown via a wrapped ``time_fn`` (the ``CommRefitter``
+  probe seam), snapshot corruption, and a mid-write kill that leaves a
+  ``.tmp`` directory behind.  Every failure mode is unit-testable on a
+  CPU container.
+* **resilient_serve_loop** — restart-with-backoff around
+  ``engine.step()``: restores the newest *loadable* snapshot (corrupt
+  ones fall back to older complete ones), re-warms the jitted step,
+  re-admits interrupted requests at their saved positions, and enforces
+  per-request deadlines — expired requests retire gracefully with
+  partial output, and admission sheds load when
+  ``ServePlan.predicted_step_time()`` says the SLO cannot be met.
+* **degraded-fabric replan** — a ``StragglerMonitor`` over observed step
+  times; on sustained degradation the serve-side (α, β) is re-fit
+  (``planning.refit_serve_fit``) and the plan rebuilt at the degraded
+  constants (``planning.rebuild_serve_plan``) — the merge decision
+  changes when the wire slows down.
+
+See ``docs/resilience.md`` for the failure model and snapshot schema.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from ..checkpoint import available_steps, latest_step, restore, save
+from ..runtime.fault_tolerance import StragglerMonitor
+from .engine import Request, ServingEngine
+
+Pytree = Any
+
+log = logging.getLogger(__name__)
+
+SNAPSHOT_FORMAT = 1
+
+
+# ---------------------------------------------------------------------------
+# EngineSnapshot: the full serving state, host-side
+# ---------------------------------------------------------------------------
+
+
+def _req_to_dict(r: Request) -> dict[str, Any]:
+    return {
+        "rid": int(r.rid),
+        "prompt": [int(t) for t in np.asarray(r.prompt).tolist()],
+        "max_new_tokens": int(r.max_new_tokens),
+        "generated": [int(t) for t in r.generated],
+        "done": bool(r.done),
+        "deadline_s": None if r.deadline_s is None else float(r.deadline_s),
+        "expired": bool(r.expired),
+        "shed": bool(r.shed),
+    }
+
+
+def _req_from_dict(d: dict[str, Any]) -> Request:
+    return Request(
+        rid=int(d["rid"]),
+        prompt=np.asarray(d["prompt"], np.int32),
+        max_new_tokens=int(d["max_new_tokens"]),
+        generated=[int(t) for t in d["generated"]],
+        done=bool(d["done"]),
+        deadline_s=d.get("deadline_s"),
+        expired=bool(d.get("expired", False)),
+        shed=bool(d.get("shed", False)),
+    )
+
+
+@dataclasses.dataclass
+class EngineSnapshot:
+    """One resumable serving checkpoint, entirely host-side.
+
+    ``state`` is the engine's ``DecodeState`` pytree copied to numpy (the
+    cache arena, ``row_pos``/``next_token``/``active``/``budget``
+    vectors, and the sampling PRNG key); ``admit_key`` is the prefill
+    sampling key; the three request collections are JSON dicts (see
+    ``_req_to_dict``); ``row_pos``/``next_token`` are the engine's host
+    bookkeeping mirrors; ``meta`` pins the engine geometry
+    (``arch``/``slots``/``max_seq``) so a restore into a mismatched
+    engine fails loudly instead of decoding garbage."""
+
+    step: int
+    state: Pytree
+    admit_key: np.ndarray
+    active: dict[int, dict]
+    waiting: list[dict]
+    completed: list[dict]
+    row_pos: np.ndarray
+    next_token: np.ndarray
+    meta: dict[str, Any]
+
+    def validate_against(self, engine: ServingEngine) -> None:
+        """Raise unless ``engine`` has the geometry this snapshot was
+        taken under (same arch, slots, and max_seq)."""
+        want = _engine_meta(engine)
+        got = {k: self.meta.get(k) for k in want}
+        if got != want:
+            raise ValueError(
+                f"snapshot geometry {got} does not match engine {want}"
+            )
+
+
+def _engine_meta(engine: ServingEngine) -> dict[str, Any]:
+    return {
+        "arch": engine.cfg.name,
+        "slots": int(engine.slots),
+        "max_seq": int(engine.max_seq),
+    }
+
+
+def snapshot_engine(engine: ServingEngine, step: int = 0) -> EngineSnapshot:
+    """Copy the engine's full decode state and request queues to host
+    memory — safe to take between any two steps (the donated device state
+    is valid there) and cheap relative to a decode step at serve scale."""
+    return EngineSnapshot(
+        step=int(step),
+        state=_tree_to_host(engine._state),
+        admit_key=np.asarray(engine._admit_key),
+        active={int(s): _req_to_dict(r) for s, r in engine.active.items()},
+        waiting=[_req_to_dict(r) for r in engine.waiting],
+        completed=[_req_to_dict(r) for r in engine.completed],
+        row_pos=np.asarray(engine.row_pos, np.int32).copy(),
+        next_token=np.asarray(engine.next_token, np.int32).copy(),
+        meta={"serve_snapshot_format": SNAPSHOT_FORMAT, **_engine_meta(engine)},
+    )
+
+
+def requests_from_snapshot(
+    snap: EngineSnapshot,
+) -> tuple[dict[int, Request], list[Request], list[Request]]:
+    """Rebuild the three request collections from a snapshot (fresh
+    ``Request`` objects — restored runs never alias the caller's)."""
+    active = {int(s): _req_from_dict(d) for s, d in snap.active.items()}
+    waiting = [_req_from_dict(d) for d in snap.waiting]
+    completed = [_req_from_dict(d) for d in snap.completed]
+    return active, waiting, completed
+
+
+def _tree_to_host(tree: Pytree) -> Pytree:
+    import jax
+
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def save_snapshot(
+    engine: ServingEngine, directory: str, step: int
+) -> EngineSnapshot:
+    """Snapshot the engine and persist it under ``directory/step_<k>/``
+    via ``checkpoint.save`` — the same atomic-rename machinery training
+    checkpoints use, so a crash mid-write always leaves a complete older
+    snapshot behind (``latest_snapshot`` never sees a partial one)."""
+    snap = snapshot_engine(engine, step)
+    save(
+        directory,
+        step,
+        {"state": snap.state, "admit_key": snap.admit_key},
+        extra={
+            "meta": snap.meta,
+            "step": snap.step,
+            "active": {str(s): d for s, d in snap.active.items()},
+            "waiting": snap.waiting,
+            "completed": snap.completed,
+            "row_pos": snap.row_pos.tolist(),
+            "next_token": snap.next_token.tolist(),
+        },
+    )
+    return snap
+
+
+def load_snapshot(
+    directory: str, step: int, engine: ServingEngine
+) -> EngineSnapshot:
+    """Read one on-disk snapshot back into an ``EngineSnapshot``.
+
+    ``engine`` supplies the pytree structure (a restore target must be
+    built with the snapshot's geometry anyway); raises on a corrupt or
+    geometry-mismatched snapshot — ``restore_latest_snapshot`` catches
+    and falls back."""
+    like = {
+        "state": _tree_to_host(engine._state),
+        "admit_key": np.asarray(engine._admit_key),
+    }
+    tree, extra = restore(directory, step, like)
+    meta = extra.get("meta", {})
+    if meta.get("serve_snapshot_format") != SNAPSHOT_FORMAT:
+        raise ValueError(
+            f"unsupported serve snapshot format {meta.get('serve_snapshot_format')!r}"
+        )
+    return EngineSnapshot(
+        step=int(extra["step"]),
+        state=tree["state"],
+        admit_key=tree["admit_key"],
+        active={int(s): d for s, d in extra["active"].items()},
+        waiting=list(extra["waiting"]),
+        completed=list(extra["completed"]),
+        row_pos=np.asarray(extra["row_pos"], np.int32),
+        next_token=np.asarray(extra["next_token"], np.int32),
+        meta=meta,
+    )
+
+
+def latest_snapshot(directory: str) -> int | None:
+    """Step of the newest complete on-disk snapshot (None when empty)."""
+    return latest_step(directory)
+
+
+def restore_latest_snapshot(
+    engine: ServingEngine, directory: str
+) -> tuple[int, int]:
+    """Restore the newest *loadable* snapshot into ``engine``.
+
+    Walks complete snapshots newest-first; a corrupt one (chaos-injected
+    or a real bad disk — ``np.load`` CRC failures, geometry mismatches)
+    is logged and skipped, falling back to the next older complete
+    snapshot.  Returns ``(restored_step, skipped)``; raises
+    ``RuntimeError`` when no snapshot loads at all."""
+    skipped = 0
+    for step in reversed(available_steps(directory)):
+        try:
+            snap = load_snapshot(directory, step, engine)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception:
+            log.exception("snapshot step %d unloadable; falling back", step)
+            skipped += 1
+            continue
+        engine.restore_snapshot(snap)
+        return step, skipped
+    raise RuntimeError(
+        f"no loadable serve snapshot in {directory!r} ({skipped} corrupt)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# ChaosInjector: deterministic, seeded fault injection
+# ---------------------------------------------------------------------------
+
+
+class ChaosError(RuntimeError):
+    """An injected failure — what the chaos step-raise seam throws."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault schedule for one chaos run.
+
+    ``kill_every``/``kill_at`` raise deterministically (each step kills
+    at most once, so a restored run replaying the same step makes
+    progress); ``kill_prob`` draws a seeded Bernoulli per attempted step
+    (bounded by ``max_kills``).  ``slow_factor``/``slow_after`` model a
+    degraded fabric: observed step times and probed collective times are
+    multiplied once the loop passes ``slow_after`` — the injectable
+    ``time_fn`` seam ``CommRefitter`` established.  ``corrupt_snapshot_at``
+    flips bytes in the newest snapshot's leaf file after the first
+    snapshot at/after that step; ``partial_write_at`` drops a
+    manifest-less ``step_<k>.tmp`` directory (a write killed mid-flight)
+    — both exercise the fallback-to-older-snapshot path."""
+
+    seed: int = 0
+    kill_every: int = 0
+    kill_at: tuple[int, ...] = ()
+    kill_prob: float = 0.0
+    max_kills: int | None = None
+    slow_factor: float = 1.0
+    slow_after: int | None = None
+    corrupt_snapshot_at: int | None = None
+    partial_write_at: int | None = None
+
+
+class ChaosInjector:
+    """Deterministic executor of a ``ChaosConfig``.
+
+    Mirrors the ``fault_injector(step)`` contract of
+    ``runtime.fault_tolerance.resilient_loop`` so the serve loop's chaos
+    seam is the same shape as training's, and adds the serve-specific
+    seams: step-time scaling, collective-probe wrapping, snapshot
+    corruption, and the mid-write kill."""
+
+    def __init__(self, config: ChaosConfig):
+        self.config = config
+        self.rng = np.random.default_rng(config.seed)
+        self.kills = 0
+        self._killed_steps: set[int] = set()
+        self._corrupted = False
+        self._partial = False
+
+    # -- step-raise seam ----------------------------------------------------
+
+    def fault_injector(self, step: int) -> None:
+        """Raise ``ChaosError`` when the schedule kills this step (each
+        step index kills at most once — a restored run replaying the same
+        step must make progress)."""
+        c = self.config
+        if self.kills_exhausted():
+            return
+        due = (step in c.kill_at) or (
+            c.kill_every > 0 and step > 0 and step % c.kill_every == 0
+        )
+        if not due and c.kill_prob > 0:
+            due = bool(self.rng.random() < c.kill_prob)
+        if due and step not in self._killed_steps:
+            self._killed_steps.add(step)
+            self.kills += 1
+            raise ChaosError(f"injected kill at serve step {step}")
+
+    def kills_exhausted(self) -> bool:
+        c = self.config
+        return c.max_kills is not None and self.kills >= c.max_kills
+
+    # -- degraded-fabric seams ----------------------------------------------
+
+    def degraded(self, step: int) -> bool:
+        c = self.config
+        return (
+            c.slow_factor != 1.0
+            and c.slow_after is not None
+            and step >= c.slow_after
+        )
+
+    def scale_step_time(self, dt: float, step: int) -> float:
+        """Observed step seconds under chaos: multiplied by
+        ``slow_factor`` once the fabric is degraded — what the
+        ``StragglerMonitor`` sees."""
+        return dt * self.config.slow_factor if self.degraded(step) else dt
+
+    def wrap_time_fn(
+        self, time_fn: Callable[[int], float], step_fn: Callable[[], int]
+    ) -> Callable[[int], float]:
+        """Wrap a ``time_fn(nbytes) -> seconds`` collective probe so it
+        reports degraded times once the fabric is slow — the injectable
+        seam ``refit_serve_fit`` probes through, making the degraded
+        replan unit-testable without real network noise."""
+
+        def wrapped(nbytes: int) -> float:
+            t = float(time_fn(nbytes))
+            return (
+                t * self.config.slow_factor if self.degraded(step_fn()) else t
+            )
+
+        return wrapped
+
+    # -- snapshot seams -----------------------------------------------------
+
+    def post_snapshot(self, directory: str, step: int) -> None:
+        """Apply the snapshot-targeting faults once their step arrives
+        (called by the loop right after each snapshot lands)."""
+        c = self.config
+        if (
+            c.corrupt_snapshot_at is not None
+            and step >= c.corrupt_snapshot_at
+            and not self._corrupted
+        ):
+            self._corrupted = True
+            self.corrupt_snapshot(directory)
+        if (
+            c.partial_write_at is not None
+            and step >= c.partial_write_at
+            and not self._partial
+        ):
+            self._partial = True
+            self.partial_write(directory, step + 1)
+
+    def corrupt_snapshot(self, directory: str, step: int | None = None) -> None:
+        """Overwrite a seeded byte range in the middle of the newest (or
+        given) snapshot's leaf file — a simulated bad disk.  The zip CRC
+        check makes the next load raise, which the restore path must
+        survive by falling back to an older complete snapshot."""
+        import pathlib
+
+        step = latest_step(directory) if step is None else step
+        if step is None:
+            return
+        path = pathlib.Path(directory) / f"step_{step:08d}" / "leaves.npz"
+        raw = bytearray(path.read_bytes())
+        if len(raw) < 128:
+            return
+        mid = len(raw) // 2
+        raw[mid : mid + 64] = bytes(self.rng.integers(0, 256, 64, np.uint8))
+        path.write_bytes(bytes(raw))
+        log.warning("chaos: corrupted snapshot step %d (%s)", step, path)
+
+    def partial_write(self, directory: str, step: int) -> None:
+        """Leave a manifest-less ``step_<k>.tmp`` directory behind — what
+        a process killed mid-snapshot-write looks like.  The atomic
+        rename contract means no reader may ever treat it as a
+        snapshot."""
+        import pathlib
+
+        tmp = pathlib.Path(directory) / f"step_{step:08d}.tmp"
+        tmp.mkdir(parents=True, exist_ok=True)
+        (tmp / "leaves.npz").write_bytes(
+            bytes(self.rng.integers(0, 256, 256, np.uint8))
+        )
+        log.warning("chaos: left partial snapshot write %s", tmp)
+
+
+# ---------------------------------------------------------------------------
+# resilient_serve_loop: restart-with-backoff around engine.step()
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What one ``resilient_serve_loop`` run did.
+
+    ``shed``/``expired`` are final request states (counted once each, no
+    matter how many restores replayed the decision); ``recovery_times_s``
+    is one entry per restart — backoff + snapshot restore + step re-warm,
+    the serve-side MTTR.  ``goodput_tokens`` counts tokens of completed
+    requests that met their deadline (shed and expired requests
+    contribute nothing)."""
+
+    completed: list[Request] = dataclasses.field(default_factory=list)
+    steps: int = 0
+    restarts: int = 0
+    replans: int = 0
+    snapshots: int = 0
+    snapshot_fallbacks: int = 0
+    shed: int = 0
+    expired: int = 0
+    recovery_times_s: list[float] = dataclasses.field(default_factory=list)
+    interrupted: bool = False
+    goodput_tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def goodput_tok_per_s(self) -> float:
+        """Deadline-meeting tokens per wall second over the whole run."""
+        return self.goodput_tokens / max(self.wall_s, 1e-9)
+
+
+def _expire_and_shed(
+    engine: ServingEngine, now: float, report: ServeReport
+) -> None:
+    """Deadline enforcement, both ends: active rows past their deadline
+    retire with partial output; waiting requests whose predicted
+    completion misses their deadline are shed before they cost a step."""
+    pred = engine.predicted_step_time() or 0.0
+    for slot, req in list(engine.active.items()):
+        if req.deadline_s is not None and now >= req.deadline_s:
+            engine.retire(slot, expired=True)
+    kept = []
+    for req in engine.waiting:
+        if req.deadline_s is not None:
+            eta = now + pred * (req.max_new_tokens + 1)
+            if now >= req.deadline_s or eta > req.deadline_s:
+                req.shed = True
+                req.done = True
+                engine.completed.append(req)
+                continue
+        kept.append(req)
+    engine.waiting[:] = kept
+
+
+def _degraded_replan(
+    engine: ServingEngine,
+    baseline_model: Any,
+    chaos: ChaosInjector | None,
+    refit_time_fn: Callable[[int], float] | None,
+    refit_sizes: tuple[int, ...] | None,
+    step: int,
+    on_replan: Callable[[Any], None] | None,
+) -> None:
+    """Re-fit the serve-side (α, β) and rebuild the plan at the degraded
+    constants — the ``CommRefitter`` pattern through the serve wire."""
+    from ..planning.serve import rebuild_serve_plan, refit_serve_fit
+
+    plan = engine.plan
+    if plan is None:
+        return
+    # default probe: the loop-entry plan's pricing — under chaos slowdown
+    # this *is* the degraded wire (the unit-test seam; probing the
+    # baseline, never the previous fit, keeps repeated replans from
+    # compounding); production passes
+    # planning.serve_collective_time_fn(mesh, plan.op) for live probes
+    time_fn = refit_time_fn or (lambda nb: float(baseline_model(nb)))
+    if chaos is not None:
+        time_fn = chaos.wrap_time_fn(time_fn, lambda: step)
+    fit = refit_serve_fit(
+        time_fn, probe_sizes=refit_sizes,
+        name=f"degraded:{plan.model.name or plan.fabric}",
+    )
+    new_plan = rebuild_serve_plan(plan, fit)
+    engine.install_plan(new_plan)
+    log.warning(
+        "degraded-fabric replan at step %d: (a=%.3e, b=%.3e) -> "
+        "(a=%.3e, b=%.3e), %d -> %d groups",
+        step, plan.model.a, plan.model.b, fit.a, fit.b,
+        len(plan.schedule.groups), len(new_plan.schedule.groups),
+    )
+    if on_replan is not None:
+        on_replan(new_plan)
+
+
+def resilient_serve_loop(
+    engine: ServingEngine,
+    *,
+    snapshot_dir: str,
+    snapshot_every: int = 8,
+    max_restarts: int = 5,
+    max_steps: int = 10_000,
+    backoff_base_s: float = 0.05,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    clock: Callable[[], float] = time.monotonic,
+    chaos: ChaosInjector | None = None,
+    straggler: StragglerMonitor | None = None,
+    refit_time_fn: Callable[[int], float] | None = None,
+    refit_sizes: tuple[int, ...] | None = None,
+    on_replan: Callable[[Any], None] | None = None,
+    stop_flag: Callable[[], bool] | None = None,
+) -> ServeReport:
+    """Run ``engine`` to completion, surviving failures — the serve-side
+    ``resilient_loop``.
+
+    Snapshot cadence: one snapshot before the first step (so a kill at
+    any point has something to restore) and every ``snapshot_every``
+    steps after.  On a step failure the loop logs the traceback, backs
+    off exponentially (``backoff_base_s * 2**(restarts-1)``, ``sleep_fn``
+    injectable), restores the newest loadable snapshot (corrupt ones fall
+    back to older complete ones — ``snapshot_fallbacks`` counts them),
+    re-warms the jitted step, and resumes; in-flight requests continue at
+    their saved positions, so the completed tokens are bit-identical to
+    an uninterrupted run (pinned by the chaos tests and the
+    ``serve_resilience`` benchmark).  ``KeyboardInterrupt``/``SystemExit``
+    snapshot best-effort and re-raise — an operator interrupt stops the
+    loop, it never restarts it (``launch/serve.py`` turns SIGINT into
+    ``stop_flag`` for the fully graceful version).
+
+    Deadlines: before every step, active rows past their
+    ``Request.deadline_s`` retire gracefully with partial output, and
+    waiting requests whose predicted completion (admission now +
+    ``engine.predicted_step_time()`` × remaining budget) misses their
+    deadline are shed unadmitted.  All times are on ``clock`` —
+    injectable, so deadline behavior is deterministic under test.
+
+    Degradation: when ``straggler`` flags sustained slow steps (observed
+    step seconds, chaos-scaled under injection), the serve (α, β) is
+    re-fit through ``refit_time_fn`` and the plan rebuilt at the degraded
+    constants (``planning.rebuild_serve_plan``) — the merge schedule
+    changes when the wire slows down, and a sharded engine recompiles its
+    step to execute the new schedule.
+    """
+    report = ServeReport()
+    t_start = clock()
+    step = 0
+    restarts = 0
+    baseline_model = engine.plan.model if engine.plan is not None else None
+    save_snapshot(engine, snapshot_dir, step)
+    report.snapshots += 1
+
+    while step < max_steps:
+        if stop_flag is not None and stop_flag():
+            save_snapshot(engine, snapshot_dir, step)
+            report.snapshots += 1
+            report.interrupted = True
+            break
+        if not engine.active and not engine.waiting:
+            break
+        try:
+            _expire_and_shed(engine, clock(), report)
+            if not engine.active and not engine.waiting:
+                break
+            if chaos is not None:
+                chaos.fault_injector(step)
+            t0 = clock()
+            engine.step()
+            dt = clock() - t0
+            step += 1
+            report.steps += 1
+            if chaos is not None:
+                dt = chaos.scale_step_time(dt, step)
+            if straggler is not None and straggler.observe(dt):
+                _degraded_replan(
+                    engine, baseline_model, chaos, refit_time_fn,
+                    refit_sizes, step, on_replan,
+                )
+                report.replans += 1
+            if step % max(1, snapshot_every) == 0:
+                save_snapshot(engine, snapshot_dir, step)
+                report.snapshots += 1
+                if chaos is not None:
+                    chaos.post_snapshot(snapshot_dir, step)
+        except (KeyboardInterrupt, SystemExit):
+            save_snapshot(engine, snapshot_dir, step)
+            raise  # operator interrupts stop the loop, never restart it
+        except Exception:
+            log.exception(
+                "serve step %d failed; restart %d/%d from latest snapshot",
+                step, restarts + 1, max_restarts,
+            )
+            restarts += 1
+            report.restarts = restarts
+            if restarts > max_restarts:
+                raise
+            t_fail = clock()
+            if backoff_base_s > 0:
+                sleep_fn(backoff_base_s * 2 ** (restarts - 1))
+            restored, skipped = restore_latest_snapshot(engine, snapshot_dir)
+            report.snapshot_fallbacks += skipped
+            engine.warmup()  # re-warm the jitted step off the clock path
+            step = restored
+            report.recovery_times_s.append(clock() - t_fail)
+
+    report.wall_s = clock() - t_start
+    report.completed = list(engine.completed)
+    report.shed = sum(1 for r in report.completed if r.shed)
+    report.expired = sum(1 for r in report.completed if r.expired)
+    report.goodput_tokens = sum(
+        len(r.generated)
+        for r in report.completed
+        if not r.shed and not r.expired
+    )
+    return report
