@@ -28,6 +28,32 @@ from repro.compat import ensure_virtual_devices
 ensure_virtual_devices(8)
 
 
+def write_bench(name: str, record, rows: list[str], gate=None) -> pathlib.Path:
+    """Publish one suite's record: the shared stash-record-and-compare
+    tail every table used to hand-roll.
+
+    Writes ``benchmarks/results/BENCH_<name>.json`` and appends the
+    ``wrote ...`` row.  When ``gate`` is given and ``BENCH_BASELINE_DIR``
+    points at a stash of previously-committed records (the CI smoke jobs
+    stash the checked-in JSON there before re-running a suite), the gate
+    runs as ``gate(record, baseline_record)`` BEFORE the new record is
+    written — a regressed run raises and never publishes, so the
+    committed trajectory only ever moves forward."""
+    out = pathlib.Path(__file__).parent / "results" / f"BENCH_{name}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    base_dir = os.environ.get("BENCH_BASELINE_DIR")
+    if gate is not None and base_dir:
+        base_path = pathlib.Path(base_dir) / out.name
+        if base_path.exists():
+            gate(record, json.loads(base_path.read_text()))
+            rows.append(f"gate vs {base_path}: ok")
+        else:
+            rows.append(f"gate skipped: no baseline at {base_path}")
+    out.write_text(json.dumps(record, indent=1))
+    rows.append(f"wrote {out}")
+    return out
+
+
 def roofline_summary() -> list[str]:
     """Per-(arch x shape x mesh) roofline terms from the dry-run records."""
     rows = ["table=roofline_summary"]
@@ -119,10 +145,7 @@ def planning_sweep() -> list[str]:
                     f"exposed_ms={c.t_comm_exposed * 1e3:.3f}"
                     + (",chosen" if c.policy == rec.chosen else "")
                 )
-    out = pathlib.Path(__file__).parent / "results" / "BENCH_planning.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(records, indent=1))
-    rows.append(f"wrote {out}")
+    write_bench("planning", records, rows)
     return rows
 
 
@@ -255,10 +278,7 @@ def tuner() -> list[str]:
     rows.append(f"comm_drift,alpha_x10,checks_to_refit={checks},"
                 f"steps_to_refit={checks * comm_refit_every},replanned={replanned}")
 
-    out = pathlib.Path(__file__).parent / "results" / "BENCH_tuner.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(record, indent=1))
-    rows.append(f"wrote {out}")
+    write_bench("tuner", record, rows)
     return rows
 
 
@@ -328,10 +348,7 @@ def fabric_sweep() -> list[str]:
                 f"t_iter_ms={res.t_iter * 1e3:.3f},"
                 f"serve={serve.op}/{len(serve.schedule.groups)}g"
             )
-    out = pathlib.Path(__file__).parent / "results" / "BENCH_fabric.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(records, indent=1))
-    rows.append(f"wrote {out}")
+    write_bench("fabric", records, rows)
     return rows
 
 
@@ -477,10 +494,13 @@ def serve_exec() -> list[str]:
                 f"gather_total_us={sum(per_stage_group_s) * 1e6:.1f}")
     for key, m in fits.items():
         rows.append(f"fit,{key},a={m.a:.3e},b={m.b:.3e}")
-    out = pathlib.Path(__file__).parent / "results" / "BENCH_serve_exec.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(record, indent=1))
-    rows.append(f"wrote {out}")
+    def gate(rec, base):
+        floor = 0.8 * base["tokens_per_s"]
+        assert rec["tokens_per_s"] >= floor, (
+            f"serve_exec throughput regressed: {rec['tokens_per_s']:.1f} "
+            f"tok/s < 0.8x committed baseline {base['tokens_per_s']:.1f}")
+
+    write_bench("serve_exec", record, rows, gate=gate)
     return rows
 
 
@@ -586,10 +606,7 @@ def wire_layout() -> list[str]:
                 f"wire_bytes={rec['wire_bytes']},concat_ops={rec['concat_ops']},"
                 f"max_diff={max_diff:.2e}"
             )
-    out = pathlib.Path(__file__).parent / "results" / "BENCH_wire_layout.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(records, indent=1))
-    rows.append(f"wrote {out}")
+    write_bench("wire_layout", records, rows)
     return rows
 
 
@@ -773,10 +790,141 @@ def serve_resilience() -> list[str]:
                 f"pred_s={full.predicted_step_time():.2e}->"
                 f"{shifted.predicted_step_time():.2e}")
 
-    out = pathlib.Path(__file__).parent / "results" / "BENCH_serve_resilience.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(records, indent=1))
-    rows.append(f"wrote {out}")
+    write_bench("serve_resilience", records, rows)
+    return rows
+
+
+def serve_fleet() -> list[str]:
+    """Fleet-under-chaos acceptance -> ``BENCH_serve_fleet.json``.
+
+    Drives the 4-replica serving fleet (``serving.fleet``) through the
+    SAME seeded offered load with and without kill chaos and publishes
+    p50/p99 latency and goodput vs offered load:
+
+      * ``fault_free``  — 4 replicas, seeded Poisson load, no faults;
+      * ``kill_chaos``  — identical load, replica 0's fault domain kills
+        it with no restore budget, so its in-flight requests fail over.
+        Hard acceptance (re-asserted by the ``serve-fleet-smoke`` CI
+        job): goodput ≥ 70% of the fault-free run and ZERO failed-over
+        requests whose final tokens diverge from their partial prefix;
+      * ``load_sweep``  — offered rate × replica count grid: p50/p99
+        latency and goodput per cell, the saturation curve;
+      * ``slo_shed``    — a deadline no plan-priced replica can meet:
+        everything sheds at admission, costing zero decode steps.
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.launch.specs import param_specs
+    from repro.models.transformer import init_params
+    from repro.planning import build_serve_plan
+    from repro.serving import (
+        ChaosConfig,
+        FleetConfig,
+        FleetController,
+        LoadGenerator,
+        LoadSpec,
+        ServingEngine,
+    )
+
+    rows = ["table=serve_fleet"]
+    record: dict = {}
+    cfg = _dc.replace(get_reduced("tinyllama-1.1b"), param_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    slots, prompt_len, n_tokens = 2, 8, 8
+    max_seq = prompt_len + n_tokens + 1
+    plan = build_serve_plan(cfg, param_specs(cfg), "tpu_v5e", {"model": 8},
+                            batch_rows=slots, cache_dtype_bytes=4,
+                            act_dtype_bytes=4)
+
+    def factory(rid: int) -> ServingEngine:
+        eng = ServingEngine(cfg, params, slots=slots, max_seq=max_seq,
+                            plan=plan)
+        eng.warmup()
+        return eng
+
+    import tempfile
+
+    def run_cell(*, replicas, n_requests, rate=1e6, deadline_s=None,
+                 chaos=None, chaos_replicas=None, seed=0):
+        load = LoadGenerator(LoadSpec(
+            n_requests=n_requests, prompt_len=prompt_len,
+            max_new_tokens=n_tokens, rate_rps=rate, deadline_s=deadline_s,
+            seed=seed, vocab=cfg.vocab,
+        ))
+        with tempfile.TemporaryDirectory() as snap_root:
+            fleet = FleetController(
+                engine_factory=factory,
+                config=FleetConfig(replicas=replicas, snapshot_every=4,
+                                   max_restores=0, backoff_base_s=0.0),
+                snapshot_root=snap_root,
+                chaos=chaos, chaos_replicas=chaos_replicas,
+            )
+            return fleet.run(load)
+
+    # -- fault-free vs single-replica kill chaos, same seeded load ---------
+    n_requests = 16
+    ff = run_cell(replicas=4, n_requests=n_requests)
+    ko = run_cell(replicas=4, n_requests=n_requests,
+                  chaos=ChaosConfig(seed=7, kill_at=(2,)),
+                  chaos_replicas=(0,))
+    goodput_ratio = ko.goodput_tokens / max(ff.goodput_tokens, 1)
+    record["fault_free"] = ff.summary()
+    record["kill_chaos"] = ko.summary() | {
+        "goodput_ratio_vs_fault_free": goodput_ratio,
+    }
+    assert ff.failover_token_mismatches == 0
+    assert ko.replica_deaths == 1 and ko.failovers >= 1
+    assert ko.failover_token_mismatches == 0, (
+        "failed-over requests diverged from their partial prefix")
+    assert goodput_ratio >= 0.7, (
+        f"kill chaos retained only {goodput_ratio:.0%} of fault-free goodput")
+    for name, rep in (("fault_free", ff), ("kill_chaos", ko)):
+        s = rep.summary()
+        rows.append(
+            f"{name},replicas=4,offered={s['offered']},"
+            f"completed={s['completed']},p50_ms={s['p50_latency_s'] * 1e3:.1f},"
+            f"p99_ms={s['p99_latency_s'] * 1e3:.1f},"
+            f"goodput_tokens={s['goodput_tokens']},"
+            f"failovers={s['failovers']},"
+            f"mismatches={s['failover_token_mismatches']}"
+        )
+    rows.append(f"kill_chaos_goodput_ratio={goodput_ratio:.3f} (floor 0.7)")
+
+    # -- p50/p99/goodput vs offered load -----------------------------------
+    record["load_sweep"] = []
+    for replicas in (1, 2):
+        for rate in (50.0, 400.0):
+            rep = run_cell(replicas=replicas, n_requests=8, rate=rate, seed=1)
+            cell = rep.summary() | {"replicas": replicas, "rate_rps": rate}
+            record["load_sweep"].append(cell)
+            rows.append(
+                f"load,replicas={replicas},rate={rate:.0f},"
+                f"p50_ms={cell['p50_latency_s'] * 1e3:.1f},"
+                f"p99_ms={cell['p99_latency_s'] * 1e3:.1f},"
+                f"goodput_tok_s={cell['goodput_tok_per_s']:.1f}"
+            )
+
+    # -- SLO shed: no replica's plan can meet the deadline -----------------
+    shed = run_cell(replicas=2, n_requests=6, deadline_s=1e-9, seed=2)
+    assert shed.shed == 6 and shed.goodput_tokens == 0
+    record["slo_shed"] = shed.summary()
+    rows.append(f"slo_shed,offered=6,shed={shed.shed},"
+                f"goodput_tokens={shed.goodput_tokens}")
+
+    def gate(rec, base):
+        ratio = rec["kill_chaos"]["goodput_ratio_vs_fault_free"]
+        assert ratio >= 0.7, f"chaos goodput ratio {ratio:.2f} < 0.7 floor"
+        assert rec["kill_chaos"]["failover_token_mismatches"] == 0
+        base_ratio = base["kill_chaos"]["goodput_ratio_vs_fault_free"]
+        assert ratio >= 0.9 * base_ratio, (
+            f"chaos goodput ratio regressed: {ratio:.2f} vs committed "
+            f"{base_ratio:.2f}")
+
+    write_bench("serve_fleet", record, rows, gate=gate)
     return rows
 
 
@@ -790,7 +938,7 @@ def main() -> None:
 
     tables = list(ALL_TABLES) + [
         planning_sweep, wire_layout, tuner, fabric_sweep, serve_exec,
-        serve_resilience, roofline_summary,
+        serve_resilience, serve_fleet, roofline_summary,
     ]
     if args.only:
         wanted = {n.strip() for n in args.only.split(",")}

@@ -1,0 +1,201 @@
+"""Fleet launcher: N health-checked serving replicas behind the
+SLO-aware router, under seeded chaos and seeded load.
+
+    PYTHONPATH=src python -m repro.launch.serve_fleet --arch tinyllama-1.1b \\
+        --reduced --replicas 4 --requests 32 --rate 200 \\
+        --chaos-kill-at 3 --chaos-replicas 0 --deadline-ms 2000
+
+One process, N ``ServingEngine`` replicas, one ``FleetController``
+(``serving.fleet``): a seeded Poisson/trace ``LoadGenerator`` offers
+traffic, the router places each request on the replica with the
+cheapest plan-priced ETA (shedding it fleet-wide when no replica's
+``ServePlan.predicted_step_time()`` meets its deadline), per-replica
+``ChaosInjector`` fault domains are derived from one fleet seed
+(``ChaosConfig.for_replica``), and a replica that spends its restore
+budget fails its in-flight requests over to healthy peers with their
+partial output preserved.  ``--elastic`` lets the plan-priced watchdog
+add/retire replicas under backlog.  The run prints offered/completed/
+shed counts, p50/p99 latency, goodput, and the failover ledger —
+``failover_token_mismatches`` must always be 0.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_NAMES, get_config, get_reduced
+from ..fabric import available_fabrics
+from ..launch.specs import param_specs
+from ..models.transformer import init_params
+from ..planning import available_policies, build_serve_plan
+from ..serving import (
+    ChaosConfig,
+    FleetConfig,
+    FleetController,
+    LoadGenerator,
+    LoadSpec,
+    ServingEngine,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode batch slots per replica")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson offered load, requests/second")
+    ap.add_argument("--trace", default=None,
+                    help="comma-separated arrival offsets (seconds); "
+                         "overrides --rate with a trace schedule")
+    ap.add_argument("--load-seed", type=int, default=0,
+                    help="seed for arrivals and prompts (one seed replays "
+                         "the whole offered load exactly)")
+    ap.add_argument("--fabric", default="tpu_v5e",
+                    choices=list(available_fabrics()))
+    ap.add_argument("--policy", default="mg_wfbp",
+                    choices=list(available_policies()))
+    ap.add_argument("--virtual-tp", type=int, default=8,
+                    help="TP size the serve plan prices collectives at")
+    # SLO
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO relative to its arrival; requests "
+                         "no replica can finish in time are shed at admission")
+    # chaos
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="ONE fleet seed; each replica's fault domain is "
+                         "derived deterministically (ChaosConfig.for_replica)")
+    ap.add_argument("--chaos-kill-at", type=int, default=None,
+                    help="kill each chaos replica at this local serve step")
+    ap.add_argument("--chaos-kill-every", type=int, default=0)
+    ap.add_argument("--chaos-slow-factor", type=float, default=1.0)
+    ap.add_argument("--chaos-slow-after", type=int, default=None)
+    ap.add_argument("--chaos-replicas", default=None,
+                    help="comma-separated replica ids the chaos schedule "
+                         "applies to (default: all replicas)")
+    # fleet knobs
+    ap.add_argument("--max-restores", type=int, default=1,
+                    help="per-replica in-place snapshot-restore budget; past "
+                         "it the replica dies and its requests fail over")
+    ap.add_argument("--snapshot-every", type=int, default=8)
+    ap.add_argument("--snapshot-root", default=None,
+                    help="root dir for per-replica snapshots (temp dir "
+                         "when unset)")
+    ap.add_argument("--heartbeat-timeout-s", type=float, default=None)
+    ap.add_argument("--elastic", action="store_true",
+                    help="apply watchdog scale decisions (otherwise they "
+                         "are recorded, not applied)")
+    ap.add_argument("--max-replicas", type=int, default=8)
+    ap.add_argument("--scale-up-backlog-s", type=float, default=float("inf"),
+                    help="scale up when the plan-priced backlog drain time "
+                         "exceeds this")
+    ap.add_argument("--scale-down-idle-rounds", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_seq = args.prompt_len + args.tokens + 1
+
+    cache_bytes = 4  # fp32 decode caches: price the plan at what ships
+    plan = build_serve_plan(
+        cfg, param_specs(cfg), args.fabric, {"model": args.virtual_tp},
+        batch_rows=args.slots, policy=args.policy,
+        cache_dtype_bytes=cache_bytes, act_dtype_bytes=cache_bytes,
+    )
+    print(f"[fleet] {plan.describe()}")
+
+    def engine_factory(rid: int) -> ServingEngine:
+        eng = ServingEngine(cfg, params, slots=args.slots, max_seq=max_seq,
+                            plan=plan)
+        eng.warmup()
+        return eng
+
+    chaos = None
+    if (args.chaos_kill_at is not None or args.chaos_kill_every > 0
+            or args.chaos_slow_factor != 1.0):
+        chaos = ChaosConfig(
+            seed=args.chaos_seed,
+            kill_at=(args.chaos_kill_at,) if args.chaos_kill_at is not None
+            else (),
+            kill_every=args.chaos_kill_every,
+            slow_factor=args.chaos_slow_factor,
+            slow_after=args.chaos_slow_after,
+        )
+    chaos_replicas = (
+        tuple(int(x) for x in args.chaos_replicas.split(","))
+        if args.chaos_replicas is not None else None
+    )
+
+    spec = LoadSpec(
+        n_requests=args.requests,
+        prompt_len=args.prompt_len,
+        max_new_tokens=args.tokens,
+        kind="trace" if args.trace else "poisson",
+        rate_rps=args.rate,
+        trace_arrivals_s=(
+            tuple(float(x) for x in args.trace.split(","))
+            if args.trace else ()
+        ),
+        deadline_s=(args.deadline_ms / 1e3
+                    if args.deadline_ms is not None else None),
+        seed=args.load_seed,
+        vocab=cfg.vocab,
+    )
+    snap_root = args.snapshot_root or tempfile.mkdtemp(prefix="serve_fleet_")
+
+    fleet = FleetController(
+        engine_factory=engine_factory,
+        config=FleetConfig(
+            replicas=args.replicas,
+            snapshot_every=args.snapshot_every,
+            max_restores=args.max_restores,
+            heartbeat_timeout_s=args.heartbeat_timeout_s,
+            elastic=args.elastic,
+            max_replicas=args.max_replicas,
+            scale_up_backlog_s=args.scale_up_backlog_s,
+            scale_down_idle_rounds=args.scale_down_idle_rounds,
+        ),
+        snapshot_root=snap_root,
+        chaos=chaos,
+        chaos_replicas=chaos_replicas,
+    )
+    print(f"[fleet] {args.replicas} replicas x {args.slots} slots, "
+          f"{args.requests} requests "
+          f"({'trace' if args.trace else f'poisson {args.rate:.0f} rps'}), "
+          f"chaos={'on' if chaos else 'off'} (snapshots in {snap_root})")
+
+    report = fleet.run(LoadGenerator(spec))
+    s = report.summary()
+    print(f"[fleet] offered={s['offered']} completed={s['completed']} "
+          f"shed={s['shed']} expired={s['expired']} rounds={s['rounds']}")
+    print(f"[fleet] p50={s['p50_latency_s'] * 1e3:.1f}ms "
+          f"p99={s['p99_latency_s'] * 1e3:.1f}ms "
+          f"goodput={s['goodput_tok_per_s']:.1f} tok/s "
+          f"({s['goodput_tokens']} tokens in {s['wall_s']:.2f}s)")
+    print(f"[fleet] deaths={s['replica_deaths']} failovers={s['failovers']} "
+          f"restores={s['restores']} replans={s['replans']} "
+          f"scale_ups={s['scale_ups']} scale_downs={s['scale_downs']} "
+          f"token_mismatches={s['failover_token_mismatches']}")
+    for rep in report.replicas:
+        print(f"[fleet]   replica {rep['rid']}: steps={rep['steps']} "
+              f"restarts={rep['restarts']} replans={rep['replans']} "
+              f"failed_over={rep['failed_over']} retired={rep['retired']}")
+    if report.failover_token_mismatches:
+        raise SystemExit("[fleet] FAILOVER TOKEN MISMATCH — partial prefixes "
+                         "were not preserved")
+
+
+if __name__ == "__main__":
+    main()

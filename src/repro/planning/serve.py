@@ -155,6 +155,28 @@ class ServePlan:
             return None
         return self.schedule.result.t_iter + self.t_step_fixed
 
+    def predicted_completion_s(self, n_tokens: int) -> float | None:
+        """Modeled seconds for one request to decode ``n_tokens`` more
+        tokens: the engine emits one token per request per step, so a
+        request's remaining work is ``n_tokens`` steps no matter how many
+        rows share the batch.  Fleet-level admission prices a request's
+        ETA with this (queue wait + this) against its deadline.  None
+        before the schedule is evaluated."""
+        step = self.predicted_step_time()
+        return None if step is None else step * max(0, int(n_tokens))
+
+    def capacity_tok_per_s(self, rows: int) -> float | None:
+        """Modeled steady-state throughput of one replica running this
+        plan with ``rows`` busy decode slots: ``rows`` tokens per
+        predicted step.  The fleet watchdog prices scale-up/down
+        decisions with this — adding a replica buys exactly this much
+        capacity, removing one sheds it.  None before the schedule is
+        evaluated."""
+        step = self.predicted_step_time()
+        if step is None or step <= 0:
+            return None
+        return int(rows) / step
+
     def with_step_fixed(self, t_step_fixed: float) -> "ServePlan":
         """A copy of this plan with the measured fixed (dispatch+compute)
         per-step term installed (provenance records the source)."""

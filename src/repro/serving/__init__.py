@@ -2,14 +2,25 @@
 decode (``sharded``) — the executable side of ``planning.ServePlan`` —
 plus the resilience layer (``resilience``): snapshot/restore, seeded
 chaos injection, the restart serve loop, and degraded-fabric
-replanning."""
+replanning — and the fleet layer (``fleet``): N health-checked
+replicas behind one SLO-aware router with in-flight failover and
+plan-priced elastic scaling."""
 
 from .engine import Request, ServingEngine
+from .fleet import (
+    FleetConfig,
+    FleetController,
+    FleetReport,
+    FleetWatchdog,
+    LoadGenerator,
+    LoadSpec,
+)
 from .resilience import (
     ChaosConfig,
     ChaosError,
     ChaosInjector,
     EngineSnapshot,
+    ServeLoopDriver,
     ServeReport,
     latest_snapshot,
     load_snapshot,
@@ -35,7 +46,14 @@ __all__ = [
     "ChaosError",
     "ChaosInjector",
     "EngineSnapshot",
+    "FleetConfig",
+    "FleetController",
+    "FleetReport",
+    "FleetWatchdog",
+    "LoadGenerator",
+    "LoadSpec",
     "Request",
+    "ServeLoopDriver",
     "ServeReport",
     "ServeTimer",
     "ServingEngine",

@@ -64,7 +64,17 @@ class Request:
     whose predicted completion (``ServePlan.predicted_step_time()`` ×
     remaining budget) misses the deadline is never admitted
     (``shed=True``, empty ``generated``) — load shedding at admission
-    instead of wasted decode steps."""
+    instead of wasted decode steps.
+
+    ``replica_id``/``retries`` are fleet provenance
+    (``serving.fleet.FleetController``): which replica currently owns
+    the request and how many times it was failed over.  A request
+    submitted with a non-empty ``generated`` list *resumes*: admission
+    re-prefills ``prompt + generated[:-1]`` and continues decoding from
+    ``generated[-1]``, so a re-routed request keeps every token it
+    already produced (its final output is token-identical to its
+    partial prefix, and goodput is never double-charged — the tokens
+    live on one ``Request``, counted once)."""
 
     rid: int
     prompt: np.ndarray  # (prompt_len,) int32 token ids
@@ -74,6 +84,14 @@ class Request:
     deadline_s: float | None = None
     expired: bool = False
     shed: bool = False
+    replica_id: int | None = None
+    retries: int = 0
+
+    @property
+    def remaining_tokens(self) -> int:
+        """Decode steps still owed to this request — what fleet admission
+        prices against ``ServePlan.predicted_step_time()``."""
+        return max(0, self.max_new_tokens - len(self.generated))
 
 
 def _cache_size(fn) -> int:
@@ -321,19 +339,40 @@ class ServingEngine:
                                        tp_axis=self.tp_axis)
             self._step_fn = jax.jit(self._make_step(core), donate_argnums=(1,))
 
-    def retire(self, slot: int, *, expired: bool = False) -> Request:
-        """Retire an active row before its budget is spent (deadline
-        expiry): the request keeps its partial ``generated`` output, the
-        slot's device mask bit flips off (a masked write, never a
-        reshape), and the slot frees for the next admission."""
+    def retire(self, slot: int, *, expired: bool = False,
+               requeue: bool = False) -> Request:
+        """Retire an active row before its budget is spent: the request
+        keeps its partial ``generated`` output, the slot's device mask
+        bit flips off (a masked write, never a reshape), and the slot
+        frees for the next admission.
+
+        With ``requeue=True`` the request is *evicted*, not finished: it
+        is returned not-done and joins no queue — the fleet failover
+        path re-submits it elsewhere and resume admission continues it
+        from its partial prefix.  Otherwise it lands in ``completed``
+        (``expired=`` marks a deadline expiry)."""
         req = self.active.pop(slot)
-        req.done = True
-        req.expired = expired
-        self.completed.append(req)
         state = dict(self._state)
         state["active"] = state["active"].at[slot].set(False)
         self._state = state
+        if requeue:
+            return req
+        req.done = True
+        req.expired = expired
+        self.completed.append(req)
         return req
+
+    def drain_requests(self) -> list[Request]:
+        """Evict every in-flight and waiting request (active rows first,
+        in slot order) — what the fleet controller calls on a dead
+        replica to fail its work over to healthy peers.  Each request
+        keeps its partial ``generated`` output; the engine is left
+        empty."""
+        out = [self.retire(slot, requeue=True)
+               for slot in sorted(self.active)]
+        out.extend(self.waiting)
+        self.waiting.clear()
+        return out
 
     # -- snapshot / restore -------------------------------------------------
 
@@ -450,23 +489,42 @@ class ServingEngine:
         while free and self.waiting:
             slot = free.pop(0)
             req = self.waiting.pop(0)
-            logits, fresh = self._prefill(
-                self.params, self._prefill_input(req.prompt)
-            )
+            if req.generated:
+                # resume (fleet failover re-route): re-prefill everything
+                # up to the last already-sampled token, then decode that
+                # token next — the request continues from its partial
+                # prefix, no admission sample, no token double-charged
+                if req.remaining_tokens == 0:
+                    req.done = True
+                    self.completed.append(req)
+                    free.insert(0, slot)
+                    continue
+                ids = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(req.generated[:-1], np.int32)]
+                )
+                _, fresh = self._prefill(self.params, self._prefill_input(ids))
+                tok = int(req.generated[-1])
+                pos0 = len(req.prompt) + len(req.generated) - 1
+            else:
+                logits, fresh = self._prefill(
+                    self.params, self._prefill_input(req.prompt)
+                )
+                if self._keyed_sample:
+                    self._admit_key, sub = jax.random.split(self._admit_key)
+                    tok = int(np.asarray(self.sample(logits, sub))[0])
+                else:
+                    tok = int(np.asarray(self.sample(logits))[0])
+                req.generated.append(tok)
+                pos0 = len(req.prompt)
             if self.mesh is not None:
                 sh = jax.NamedSharding(self.mesh, jax.sharding.PartitionSpec())
                 fresh = jax.tree.map(lambda x: jax.device_put(x, sh), fresh)
-            if self._keyed_sample:
-                self._admit_key, sub = jax.random.split(self._admit_key)
-                tok = int(np.asarray(self.sample(logits, sub))[0])
-            else:
-                tok = int(np.asarray(self.sample(logits))[0])
-            req.generated.append(tok)
             self.active[slot] = req
-            self.row_pos[slot] = len(req.prompt)
+            self.row_pos[slot] = pos0
             self.next_token[slot] = tok
-            entries.append((slot, fresh, tok, len(req.prompt),
-                            req.max_new_tokens - 1))
+            entries.append((slot, fresh, tok, pos0,
+                            req.max_new_tokens - len(req.generated)))
         if not entries:
             return
         n_real = len(entries)

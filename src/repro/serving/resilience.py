@@ -74,6 +74,8 @@ def _req_to_dict(r: Request) -> dict[str, Any]:
         "deadline_s": None if r.deadline_s is None else float(r.deadline_s),
         "expired": bool(r.expired),
         "shed": bool(r.shed),
+        "replica_id": None if r.replica_id is None else int(r.replica_id),
+        "retries": int(r.retries),
     }
 
 
@@ -87,6 +89,8 @@ def _req_from_dict(d: dict[str, Any]) -> Request:
         deadline_s=d.get("deadline_s"),
         expired=bool(d.get("expired", False)),
         shed=bool(d.get("shed", False)),
+        replica_id=d.get("replica_id"),
+        retries=int(d.get("retries", 0)),
     )
 
 
@@ -289,6 +293,20 @@ class ChaosConfig:
     slow_after: int | None = None
     corrupt_snapshot_at: int | None = None
     partial_write_at: int | None = None
+
+    def for_replica(self, replica_id: int) -> "ChaosConfig":
+        """Derive replica ``replica_id``'s fault domain from this fleet
+        config: the schedule fields are shared, the seed is drawn
+        deterministically from ``(seed, replica_id)`` via
+        ``np.random.SeedSequence``, so every replica's Bernoulli kill
+        stream and corruption bytes are independent of its peers' yet
+        the whole multi-replica chaos run replays exactly from the one
+        fleet seed."""
+        derived = int(
+            np.random.SeedSequence([int(self.seed), int(replica_id)])
+            .generate_state(1)[0]
+        )
+        return dataclasses.replace(self, seed=derived)
 
 
 class ChaosInjector:
@@ -516,6 +534,145 @@ def _degraded_replan(
         on_replan(new_plan)
 
 
+class ServeLoopDriver:
+    """The resilient serve loop, one guarded step at a time.
+
+    Owns everything ``resilient_serve_loop`` used to keep in locals —
+    the step counter, restart budget, snapshot cadence, chaos and
+    straggler hooks, and the accumulating ``ServeReport`` — behind a
+    cooperative ``tick()``: advance one step, surviving a failure by
+    backoff + snapshot restore + step re-warm.  ``resilient_serve_loop``
+    is the single-engine while-loop over one driver;
+    ``serving.fleet.FleetController`` drives N of them round-robin (one
+    tick per replica per round), so both layers share exactly one
+    failure semantics.  A tick that exhausts ``max_restarts`` (or finds
+    no loadable snapshot) re-raises — the fleet layer's cue to fail the
+    replica's in-flight requests over to healthy peers."""
+
+    def __init__(
+        self,
+        engine: ServingEngine,
+        *,
+        snapshot_dir: str,
+        snapshot_every: int = 8,
+        max_restarts: int = 5,
+        backoff_base_s: float = 0.05,
+        sleep_fn: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.monotonic,
+        chaos: ChaosInjector | None = None,
+        straggler: StragglerMonitor | None = None,
+        refit_time_fn: Callable[[int], float] | None = None,
+        refit_sizes: tuple[int, ...] | None = None,
+        on_replan: Callable[[Any], None] | None = None,
+    ):
+        self.engine = engine
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.max_restarts = max_restarts
+        self.backoff_base_s = backoff_base_s
+        self.sleep_fn = sleep_fn
+        self.clock = clock
+        self.chaos = chaos
+        self.straggler = straggler
+        self.refit_time_fn = refit_time_fn
+        self.refit_sizes = refit_sizes
+        self.on_replan = on_replan
+        self.report = ServeReport()
+        self.step = 0
+        self.restarts = 0
+        self._baseline_model = (
+            engine.plan.model if engine.plan is not None else None
+        )
+        self._t_start = clock()
+        # one snapshot before the first step: a kill at any point has
+        # something to restore
+        self.snapshot_now()
+
+    @property
+    def idle(self) -> bool:
+        """No active rows and no waiting requests — nothing to tick."""
+        return not self.engine.active and not self.engine.waiting
+
+    def snapshot_now(self) -> None:
+        """Persist the engine at the current step (counted)."""
+        save_snapshot(self.engine, self.snapshot_dir, self.step)
+        self.report.snapshots += 1
+
+    def tick(self) -> bool:
+        """Advance one guarded serve step; returns False once no work
+        remains.  Failures inside the step recover in place (backoff,
+        restore, re-warm) unless the restart budget is exhausted, in
+        which case the failure propagates to the caller."""
+        if self.idle:
+            return False
+        try:
+            _expire_and_shed(self.engine, self.clock(), self.report)
+            if self.idle:
+                return False
+            if self.chaos is not None:
+                self.chaos.fault_injector(self.step)
+            t0 = self.clock()
+            self.engine.step()
+            dt = self.clock() - t0
+            self.step += 1
+            self.report.steps += 1
+            if self.chaos is not None:
+                dt = self.chaos.scale_step_time(dt, self.step)
+            if self.straggler is not None and self.straggler.observe(dt):
+                _degraded_replan(
+                    self.engine, self._baseline_model, self.chaos,
+                    self.refit_time_fn, self.refit_sizes, self.step,
+                    self.on_replan,
+                )
+                self.report.replans += 1
+            if self.step % max(1, self.snapshot_every) == 0:
+                self.snapshot_now()
+                if self.chaos is not None:
+                    self.chaos.post_snapshot(self.snapshot_dir, self.step)
+        except (KeyboardInterrupt, SystemExit):
+            save_snapshot(self.engine, self.snapshot_dir, self.step)
+            raise  # operator interrupts stop the loop, never restart it
+        except Exception:
+            self._recover()
+        return True
+
+    def _recover(self) -> None:
+        """Restart-with-backoff from the newest loadable snapshot (runs
+        inside the failed tick's ``except`` block; re-raises the original
+        failure once ``max_restarts`` is spent)."""
+        log.exception(
+            "serve step %d failed; restart %d/%d from latest snapshot",
+            self.step, self.restarts + 1, self.max_restarts,
+        )
+        self.restarts += 1
+        self.report.restarts = self.restarts
+        if self.restarts > self.max_restarts:
+            raise
+        t_fail = self.clock()
+        if self.backoff_base_s > 0:
+            self.sleep_fn(self.backoff_base_s * 2 ** (self.restarts - 1))
+        restored, skipped = restore_latest_snapshot(self.engine, self.snapshot_dir)
+        self.report.snapshot_fallbacks += skipped
+        self.engine.warmup()  # re-warm the jitted step off the clock path
+        self.step = restored
+        self.report.recovery_times_s.append(self.clock() - t_fail)
+
+    def finalize(self) -> ServeReport:
+        """Close out the report: wall time, completed requests, and the
+        shed/expired/goodput tallies."""
+        report = self.report
+        report.wall_s = self.clock() - self._t_start
+        report.completed = list(self.engine.completed)
+        report.shed = sum(1 for r in report.completed if r.shed)
+        report.expired = sum(1 for r in report.completed if r.expired)
+        report.goodput_tokens = sum(
+            len(r.generated)
+            for r in report.completed
+            if not r.shed and not r.expired
+        )
+        return report
+
+
 def resilient_serve_loop(
     engine: ServingEngine,
     *,
@@ -563,75 +720,30 @@ def resilient_serve_loop(
     constants (``planning.rebuild_serve_plan``) — the merge schedule
     changes when the wire slows down, and a sharded engine recompiles its
     step to execute the new schedule.
+
+    This is the single-engine while-loop over a ``ServeLoopDriver``;
+    ``serving.fleet.FleetController`` drives N drivers through the same
+    ``tick()`` for the fleet version.
     """
-    report = ServeReport()
-    t_start = clock()
-    step = 0
-    restarts = 0
-    baseline_model = engine.plan.model if engine.plan is not None else None
-    save_snapshot(engine, snapshot_dir, step)
-    report.snapshots += 1
-
-    while step < max_steps:
-        if stop_flag is not None and stop_flag():
-            save_snapshot(engine, snapshot_dir, step)
-            report.snapshots += 1
-            report.interrupted = True
-            break
-        if not engine.active and not engine.waiting:
-            break
-        try:
-            _expire_and_shed(engine, clock(), report)
-            if not engine.active and not engine.waiting:
-                break
-            if chaos is not None:
-                chaos.fault_injector(step)
-            t0 = clock()
-            engine.step()
-            dt = clock() - t0
-            step += 1
-            report.steps += 1
-            if chaos is not None:
-                dt = chaos.scale_step_time(dt, step)
-            if straggler is not None and straggler.observe(dt):
-                _degraded_replan(
-                    engine, baseline_model, chaos, refit_time_fn,
-                    refit_sizes, step, on_replan,
-                )
-                report.replans += 1
-            if step % max(1, snapshot_every) == 0:
-                save_snapshot(engine, snapshot_dir, step)
-                report.snapshots += 1
-                if chaos is not None:
-                    chaos.post_snapshot(snapshot_dir, step)
-        except (KeyboardInterrupt, SystemExit):
-            save_snapshot(engine, snapshot_dir, step)
-            raise  # operator interrupts stop the loop, never restart it
-        except Exception:
-            log.exception(
-                "serve step %d failed; restart %d/%d from latest snapshot",
-                step, restarts + 1, max_restarts,
-            )
-            restarts += 1
-            report.restarts = restarts
-            if restarts > max_restarts:
-                raise
-            t_fail = clock()
-            if backoff_base_s > 0:
-                sleep_fn(backoff_base_s * 2 ** (restarts - 1))
-            restored, skipped = restore_latest_snapshot(engine, snapshot_dir)
-            report.snapshot_fallbacks += skipped
-            engine.warmup()  # re-warm the jitted step off the clock path
-            step = restored
-            report.recovery_times_s.append(clock() - t_fail)
-
-    report.wall_s = clock() - t_start
-    report.completed = list(engine.completed)
-    report.shed = sum(1 for r in report.completed if r.shed)
-    report.expired = sum(1 for r in report.completed if r.expired)
-    report.goodput_tokens = sum(
-        len(r.generated)
-        for r in report.completed
-        if not r.shed and not r.expired
+    driver = ServeLoopDriver(
+        engine,
+        snapshot_dir=snapshot_dir,
+        snapshot_every=snapshot_every,
+        max_restarts=max_restarts,
+        backoff_base_s=backoff_base_s,
+        sleep_fn=sleep_fn,
+        clock=clock,
+        chaos=chaos,
+        straggler=straggler,
+        refit_time_fn=refit_time_fn,
+        refit_sizes=refit_sizes,
+        on_replan=on_replan,
     )
-    return report
+    while driver.step < max_steps:
+        if stop_flag is not None and stop_flag():
+            driver.snapshot_now()
+            driver.report.interrupted = True
+            break
+        if not driver.tick():
+            break
+    return driver.finalize()

@@ -1,0 +1,304 @@
+"""Serving fleet: seeded load generation, SLO-aware routing/shedding,
+in-flight failover with token-identical resume, per-replica chaos
+domains, and plan-priced watchdog scale decisions."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.launch.specs import param_specs
+from repro.models.transformer import init_params
+from repro.planning import build_serve_plan
+from repro.serving import (
+    ChaosConfig,
+    FleetConfig,
+    FleetController,
+    FleetWatchdog,
+    LoadGenerator,
+    LoadSpec,
+    Request,
+    ServingEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_reduced("tinyllama-1.1b"),
+                              param_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    plan = build_serve_plan(cfg, param_specs(cfg), "tpu_v5e",
+                            {"model": 8}, batch_rows=4)
+    return cfg, params, plan
+
+
+def make_fleet(setup, tmp_path, *, replicas=2, chaos=None,
+               chaos_replicas=None, **cfg_kw):
+    cfg, params, plan = setup
+    cfg_kw.setdefault("snapshot_every", 50)
+    cfg_kw.setdefault("max_restores", 0)
+    fleet_cfg = FleetConfig(replicas=replicas, backoff_base_s=0.0,
+                            idle_sleep_s=0.0, **cfg_kw)
+    return FleetController(
+        engine_factory=lambda rid: ServingEngine(
+            cfg, params, slots=2, max_seq=64, plan=plan),
+        config=fleet_cfg,
+        snapshot_root=str(tmp_path),
+        chaos=chaos,
+        chaos_replicas=chaos_replicas,
+    )
+
+
+def fast_load(n=4, max_new=5, **kw):
+    # arrivals all effectively immediate so CPU tests never idle-wait
+    kw.setdefault("rate_rps", 1e6)
+    return LoadGenerator(LoadSpec(n_requests=n, prompt_len=4,
+                                  max_new_tokens=max_new, **kw))
+
+
+# ---------------------------------------------------------------------------
+# LoadGenerator
+# ---------------------------------------------------------------------------
+
+
+class TestLoadGenerator:
+    def test_same_seed_same_traffic(self):
+        a = LoadGenerator(LoadSpec(n_requests=6, seed=7))
+        b = LoadGenerator(LoadSpec(n_requests=6, seed=7))
+        for (ta, ra), (tb, rb) in zip(a.due(1e9), b.due(1e9)):
+            assert ta == tb
+            assert np.array_equal(ra.prompt, rb.prompt)
+
+    def test_due_respects_arrival_order(self):
+        gen = LoadGenerator(LoadSpec(n_requests=8, kind="trace",
+                                     trace_arrivals_s=(0.0, 1.0, 2.0)))
+        first = gen.due(1.5)
+        assert [off for off, _ in first] == sorted(off for off, _ in first)
+        assert all(off <= 1.5 for off, _ in first)
+        assert not gen.exhausted
+        assert gen.next_arrival_s > 1.5
+        rest = gen.due(1e9)
+        assert len(first) + len(rest) == 8
+        assert gen.exhausted
+
+    def test_trace_cycles_past_its_length(self):
+        gen = LoadGenerator(LoadSpec(n_requests=5, kind="trace",
+                                     trace_arrivals_s=(0.0, 0.5)))
+        offs = [off for off, _ in gen.due(1e9)]
+        assert len(offs) == 5
+        assert offs == sorted(offs)
+        assert len(set(offs)) == 5  # cycling shifts repeats by a period
+
+
+# ---------------------------------------------------------------------------
+# per-replica chaos domains
+# ---------------------------------------------------------------------------
+
+
+class TestForReplica:
+    def test_deterministic_and_distinct(self):
+        fleet = ChaosConfig(seed=42, kill_at=(3,), slow_factor=2.0)
+        seeds = [fleet.for_replica(i).seed for i in range(4)]
+        again = [fleet.for_replica(i).seed for i in range(4)]
+        assert seeds == again  # exactly reproducible from the fleet seed
+        assert len(set(seeds)) == 4  # independent fault domains
+
+    def test_schedule_fields_shared(self):
+        fleet = ChaosConfig(seed=1, kill_at=(3,), kill_prob=0.25,
+                            slow_factor=2.0, slow_after=5)
+        derived = fleet.for_replica(2)
+        assert derived.kill_at == fleet.kill_at
+        assert derived.kill_prob == fleet.kill_prob
+        assert derived.slow_factor == fleet.slow_factor
+        assert derived.slow_after == fleet.slow_after
+        assert derived.seed != fleet.seed
+
+
+# ---------------------------------------------------------------------------
+# fleet runs
+# ---------------------------------------------------------------------------
+
+
+class TestFleet:
+    def test_fault_free_completes_everything(self, setup, tmp_path):
+        fleet = make_fleet(setup, tmp_path, replicas=2)
+        load = fast_load(n=5, max_new=5)
+        report = fleet.run(load)
+        assert report.offered == 5
+        assert len(report.completed) == 5
+        assert report.shed == 0 and report.expired == 0
+        assert report.goodput_tokens == 5 * 5
+        assert report.replica_deaths == 0
+        assert report.failover_token_mismatches == 0
+        assert len(report.latencies_s) == 5
+        assert report.latency_percentile(99) >= report.latency_percentile(50)
+        # router spread work across both replicas
+        assert {r.replica_id for r in report.completed.values()} == {0, 1}
+
+    def test_failover_preserves_partial_tokens(self, setup, tmp_path):
+        # replica 0 is a fault domain that dies at step 2 with no restore
+        # budget; its in-flight requests must land on replica 1 and finish
+        # token-identical to their partial prefix.
+        fleet = make_fleet(
+            setup, tmp_path, replicas=2,
+            chaos=ChaosConfig(kill_at=(2,)), chaos_replicas=(0,),
+        )
+        report = fleet.run(fast_load(n=4, max_new=8))
+        assert report.replica_deaths == 1
+        assert report.failovers >= 1
+        assert len(report.completed) == 4
+        assert report.failover_token_mismatches == 0
+        assert report.goodput_tokens == 4 * 8  # never double-charged
+        moved = [r for r in report.completed.values() if r.retries > 0]
+        assert moved
+        assert all(r.replica_id == 1 for r in moved)
+        assert all(len(r.generated) == 8 for r in moved)
+
+    def test_failover_is_deterministic(self, setup, tmp_path):
+        out = []
+        for sub in ("a", "b"):
+            fleet = make_fleet(
+                setup, tmp_path / sub, replicas=2,
+                chaos=ChaosConfig(seed=5, kill_at=(2,)), chaos_replicas=(0,),
+            )
+            report = fleet.run(fast_load(n=4, max_new=6, seed=3))
+            out.append({rid: tuple(r.generated)
+                        for rid, r in sorted(report.completed.items())})
+        assert out[0] == out[1]
+
+    def test_sheds_when_no_replica_meets_deadline(self, setup, tmp_path):
+        fleet = make_fleet(setup, tmp_path, replicas=2)
+        report = fleet.run(fast_load(n=3, max_new=64, deadline_s=1e-9))
+        assert report.shed == 3
+        assert report.goodput_tokens == 0
+        assert all(r.shed for r in report.completed.values())
+        assert report.latency_percentile(99) == 0.0  # shed requests excluded
+
+    def test_elastic_scale_up_under_backlog(self, setup, tmp_path):
+        fleet = make_fleet(
+            setup, tmp_path, replicas=1, elastic=True, max_replicas=2,
+            scale_up_backlog_s=0.0,
+        )
+        report = fleet.run(fast_load(n=6, max_new=6))
+        assert report.scale_ups >= 1
+        assert len(fleet.replicas) == 2
+        assert report.scale_decisions
+        d = report.scale_decisions[0]
+        assert d["action"] == "scale_up"
+        assert d["drain_s_after"] < d["drain_s_before"]
+        assert len(report.completed) == 6
+        assert report.failover_token_mismatches == 0
+        # the scaled-up replica absorbed rebalanced backlog, not just
+        # existed: it decoded steps and finished requests of its own
+        scaled = next(r for r in report.replicas if r["rid"] == 1)
+        assert scaled["steps"] > 0
+        assert {r.replica_id for r in report.completed.values()} == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# watchdog pricing (unit level)
+# ---------------------------------------------------------------------------
+
+
+class _FakePlan:
+    def capacity_tok_per_s(self, rows):
+        return float(rows) * 100.0
+
+
+class TestFleetWatchdog:
+    def test_scale_up_priced_by_plan(self):
+        dog = FleetWatchdog(scale_up_backlog_s=0.5)
+        act = dog.assess(round_idx=0, backlog_tokens=1000, n_alive=2,
+                         plan=_FakePlan(), slots=4)
+        assert act == "scale_up"
+        d = dog.decisions[0]
+        assert d["capacity_tok_per_s_per_replica"] == 400.0
+        assert d["drain_s_before"] == pytest.approx(1000 / 800)
+        assert d["drain_s_after"] == pytest.approx(1000 / 1200)
+
+    def test_cooldown_blocks_thrash(self):
+        dog = FleetWatchdog(scale_up_backlog_s=0.5, cooldown_rounds=3)
+        assert dog.assess(round_idx=0, backlog_tokens=1000, n_alive=1,
+                          plan=_FakePlan(), slots=4) == "scale_up"
+        for i in range(1, 3):
+            assert dog.assess(round_idx=i, backlog_tokens=1000, n_alive=1,
+                              plan=_FakePlan(), slots=4) is None
+        # the next decision lands exactly cooldown_rounds later
+        assert dog.assess(round_idx=3, backlog_tokens=1000, n_alive=1,
+                          plan=_FakePlan(), slots=4) == "scale_up"
+
+    def test_scale_down_after_idle(self):
+        dog = FleetWatchdog(scale_down_idle_rounds=2, cooldown_rounds=0)
+        assert dog.assess(round_idx=0, backlog_tokens=0, n_alive=2,
+                          plan=_FakePlan(), slots=4) is None
+        assert dog.assess(round_idx=1, backlog_tokens=0, n_alive=2,
+                          plan=_FakePlan(), slots=4) == "scale_down"
+        # never below one replica
+        dog2 = FleetWatchdog(scale_down_idle_rounds=1, cooldown_rounds=0)
+        assert dog2.assess(round_idx=0, backlog_tokens=0, n_alive=1,
+                           plan=_FakePlan(), slots=4) is None
+
+    def test_unpriced_fleet_never_scales(self):
+        dog = FleetWatchdog(scale_up_backlog_s=0.0)
+        assert dog.assess(round_idx=0, backlog_tokens=10_000, n_alive=1,
+                          plan=None, slots=4) is None
+        assert not dog.decisions
+
+
+# ---------------------------------------------------------------------------
+# engine failover seams (drain + resume re-admission)
+# ---------------------------------------------------------------------------
+
+
+class TestEngineFailoverSeams:
+    def test_drain_requests_empties_engine(self, setup, tmp_path):
+        cfg, params, plan = setup
+        eng = ServingEngine(cfg, params, slots=2, max_seq=64, plan=plan)
+        for rid in range(3):
+            eng.submit(Request(rid=rid,
+                               prompt=np.arange(4, dtype=np.int32) + 1,
+                               max_new_tokens=6))
+        for _ in range(2):
+            eng.step()
+        reqs = eng.drain_requests()
+        assert len(reqs) == 3
+        assert not eng.active and not eng.waiting
+        assert not any(r.done for r in reqs)
+        # in-flight requests keep their partial output for the peer
+        assert any(r.generated for r in reqs)
+
+    def test_resume_admission_preserves_prefix(self, setup, tmp_path):
+        # the failover contract: a request drained mid-flight and
+        # resumed on a peer keeps its partial prefix verbatim, finishes
+        # to full budget, and the resumed continuation is deterministic.
+        # (Bit-identity with an uninterrupted run is NOT promised — the
+        # peer re-prefills the prefix, and batched prefill is not
+        # bit-identical to incremental decode in fp32; exact-state
+        # identity is what snapshots are for.)
+        cfg, params, plan = setup
+        prompt = np.arange(5, dtype=np.int32) + 1
+
+        a = ServingEngine(cfg, params, slots=2, max_seq=64)
+        a.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+        for _ in range(3):
+            a.step()
+        (req,) = a.drain_requests()
+        prefix = list(req.generated)
+        assert 0 < len(prefix) < 8
+
+        outs = []
+        for _ in range(2):
+            b = ServingEngine(cfg, params, slots=2, max_seq=64)
+            clone = dataclasses.replace(
+                req, generated=list(prefix), done=False, retries=req.retries + 1,
+            )
+            b.submit(clone)
+            while b.active or b.waiting:
+                b.step()
+            outs.append(list(b.completed[0].generated))
+        assert outs[0][: len(prefix)] == prefix
+        assert len(outs[0]) == 8  # finishes the full token budget
+        assert outs[0] == outs[1]  # resumed continuation is deterministic

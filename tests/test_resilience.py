@@ -269,6 +269,45 @@ class TestSnapshotRestore:
         ChaosInjector(ChaosConfig(seed=1)).partial_write(str(tmp_path), 5)
         assert latest_snapshot(str(tmp_path)) == 3
 
+    def test_mixed_directory_lands_on_newest_complete(self, setup, tmp_path):
+        """A directory after a rough night: complete snapshots at steps
+        2/4/6/8, the two newest byte-flipped, plus partial writes newer
+        than everything.  ``restore_latest_snapshot`` must skip the
+        partials outright (never listed as snapshots), count one
+        fallback per corrupt snapshot, and land on the newest complete
+        one — step 4."""
+        eng = make_engine(setup)
+        submit_all(eng, n=2, max_new=12)
+        want_row_pos = {}
+        for step in (2, 4, 6, 8):
+            eng.step()
+            eng.step()
+            save_snapshot(eng, str(tmp_path), step)
+            want_row_pos[step] = eng.row_pos.copy()
+        inj = ChaosInjector(ChaosConfig(seed=11))
+        inj.corrupt_snapshot(str(tmp_path), 8)
+        inj.corrupt_snapshot(str(tmp_path), 6)
+        inj.partial_write(str(tmp_path), 9)
+        inj.partial_write(str(tmp_path), 11)
+
+        fresh = make_engine(setup)
+        step, skipped = restore_latest_snapshot(fresh, str(tmp_path))
+        assert step == 4
+        assert skipped == 2  # one fallback per corrupt snapshot
+        assert np.array_equal(fresh.row_pos, want_row_pos[4])
+
+    def test_all_snapshots_corrupt_raises(self, setup, tmp_path):
+        eng = make_engine(setup)
+        submit_all(eng)
+        inj = ChaosInjector(ChaosConfig(seed=2))
+        for step in (1, 2):
+            eng.step()
+            save_snapshot(eng, str(tmp_path), step)
+            inj.corrupt_snapshot(str(tmp_path), step)
+        fresh = make_engine(setup)
+        with pytest.raises(RuntimeError, match="no loadable serve snapshot"):
+            restore_latest_snapshot(fresh, str(tmp_path))
+
 
 # ---------------------------------------------------------------------------
 # chaos-injected serve loop
