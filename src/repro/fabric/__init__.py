@@ -18,6 +18,12 @@ the single seam where a scheduled ``Collective`` becomes a ``jax.lax``
 primitive (used by the training sync and the serve wire alike).
 """
 
+from .hierarchical import (
+    PIPELINE_10GBE,
+    TPU_V5E_TREE_DCN,
+    TREE_10GBE,
+    HierarchicalFabric,
+)
 from .measured import MeasuredFabric
 from .model import Collective, Fabric, RingInterconnect
 from .ops import issue
@@ -29,10 +35,14 @@ __all__ = [
     "DCN_ONLY",
     "Fabric",
     "GPU_NCCL",
+    "HierarchicalFabric",
     "MeasuredFabric",
     "PAPER_10GBE",
+    "PIPELINE_10GBE",
     "RingInterconnect",
     "TPU_V5E",
+    "TPU_V5E_TREE_DCN",
+    "TREE_10GBE",
     "TpuInterconnect",
     "available_fabrics",
     "get_fabric",

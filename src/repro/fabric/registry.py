@@ -59,6 +59,7 @@ def get_fabric(name: str | Fabric) -> Fabric:
     return _FABRICS[name]
 
 
-def available_fabrics() -> tuple[str, ...]:
-    """Registered preset names, sorted."""
-    return tuple(sorted(_FABRICS))
+def available_fabrics() -> list[str]:
+    """Registered preset names as a sorted list — directly usable as
+    argparse ``choices`` and always in stable display order."""
+    return sorted(_FABRICS)

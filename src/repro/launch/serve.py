@@ -93,8 +93,9 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--fabric", default="tpu_v5e",
-                    choices=list(available_fabrics()),
-                    help="interconnect preset pricing the decode collectives")
+                    choices=available_fabrics(),
+                    help="interconnect preset pricing the decode collectives: "
+                         f"{', '.join(available_fabrics())}")
     ap.add_argument("--policy", default="mg_wfbp",
                     choices=list(available_policies()),
                     help="scheduler policy for the serve plan")

@@ -98,10 +98,13 @@ def main() -> None:
     ap.add_argument("--virtual-dp", type=int, default=32,
                     help="DP size assumed by the α–β schedule model")
     ap.add_argument("--fabric", default="tpu_v5e",
-                    choices=list(available_fabrics()),
-                    help="interconnect preset pricing the DP all-reduce "
-                         "(fabric registry; tpu_v5e matches the historical "
-                         "analytic TPU model)")
+                    choices=available_fabrics(),
+                    help="interconnect preset pricing the DP all-reduce: "
+                         f"{', '.join(available_fabrics())} "
+                         "(tpu_v5e matches the historical analytic TPU "
+                         "model; tree_10gbe / pipeline_10gbe / "
+                         "tpu_v5e_tree_dcn are the hierarchical Wang-Vuduc "
+                         "reductions)")
     ap.add_argument("--measure-comm", action="store_true",
                     help="fit (α, β) from timed psums on the live mesh "
                          "(a MeasuredFabric, journal §V-A) instead of the "

@@ -1,0 +1,62 @@
+"""Fleet-scale what-if simulator: replay the plan lifecycle without hardware.
+
+The paper validated MG-WFBP at 64 nodes by trace-based simulation; this
+package does the same with strictly better inputs — the repo's own
+fabric cost models (analytic presets or measured α–β fits), per-unit
+compute probes, frozen ``Plan``/``ServePlan`` artifacts, and the seeded
+fleet traffic traces.  A deterministic discrete-event simulator
+(``events``/``replay``) replays backward-pass gradient readiness,
+merged-group all-reduce issue per any registered policy, and serve-side
+decode steps over hypothetical fleets described by a ``ClusterSpec``
+(``cluster``): up to 512 hosts, two-tier ICI+DCN hierarchies,
+heterogeneous stragglers, elastic shrink/grow, replica kills.
+
+``calibrate`` anchors every extrapolation to the committed benchmark
+records within a pinned <= 1.25x budget, and ``report`` freezes the
+scaling-efficiency / serve-throughput curves into a byte-deterministic
+``SimReport`` usable as a plan-selection input.
+
+Entry points: ``launch/simulate.py`` (CLI), ``benchmarks/run.py sim``
+(the gated ``BENCH_sim.json`` table); see ``docs/simulator.md``.
+"""
+
+from .calibrate import (
+    DEFAULT_RATIO_BUDGET,
+    CalibrationReport,
+    CalibrationRow,
+    calibrate_serve,
+    calibrate_train,
+)
+from .cluster import MAX_HOSTS, ClusterEvent, ClusterSpec
+from .events import Event, EventQueue
+from .replay import (
+    ServeSimResult,
+    SimIteration,
+    TrainReplayResult,
+    replay_serve,
+    replay_train,
+    simulate_train_iteration,
+)
+from .report import SimReport, SimRow, row_from_replay
+
+__all__ = [
+    "CalibrationReport",
+    "CalibrationRow",
+    "ClusterEvent",
+    "ClusterSpec",
+    "DEFAULT_RATIO_BUDGET",
+    "Event",
+    "EventQueue",
+    "MAX_HOSTS",
+    "ServeSimResult",
+    "SimIteration",
+    "SimReport",
+    "SimRow",
+    "TrainReplayResult",
+    "calibrate_serve",
+    "calibrate_train",
+    "replay_serve",
+    "replay_train",
+    "row_from_replay",
+    "simulate_train_iteration",
+]

@@ -1,0 +1,75 @@
+"""Deterministic discrete-event core of the what-if simulator.
+
+The simulator replays the plan lifecycle (gradient readiness, merged
+all-reduce issue, decode steps) as an event-driven timeline rather than
+a closed-form formula, so heterogeneous fleets — per-host straggler
+multipliers, elastic shrink/grow, replica kills — fall out of the same
+machinery that reproduces ``core.timeline.evaluate`` exactly in the
+homogeneous case (pinned by ``tests/test_sim.py``).
+
+Determinism contract: events are ordered by ``(time, seq)`` where
+``seq`` is the push order — ties at the same simulated instant resolve
+in insertion order, never by payload identity or hash order, so one
+seed always yields one byte-identical trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence: ``kind`` at simulated ``time`` seconds.
+
+    ``payload`` carries kind-specific data (host id, group index,
+    replica id, request).  ``seq`` is the queue-assigned tiebreak — two
+    events at the same instant fire in push order."""
+
+    time: float
+    kind: str
+    payload: dict[str, Any]
+    seq: int = 0
+
+
+class EventQueue:
+    """Min-heap of :class:`Event` ordered by ``(time, seq)``.
+
+    ``pop`` enforces monotonic time (an event scheduled in the past is a
+    simulator bug, not a tolerable race), and ``pushed``/``popped``
+    counters make event volume observable in reports."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.pushed = 0
+        self.popped = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, time: float, kind: str, **payload: Any) -> Event:
+        """Schedule ``kind`` at ``time``; returns the enqueued event."""
+        if time < 0.0:
+            raise ValueError(f"event {kind!r} scheduled at negative time {time}")
+        ev = Event(time=float(time), kind=kind, payload=payload, seq=self._seq)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        self._seq += 1
+        self.pushed += 1
+        return ev
+
+    def pop(self) -> Event:
+        """Next event in ``(time, seq)`` order; advances ``now``."""
+        if not self._heap:
+            raise IndexError("pop from empty EventQueue")
+        time, _, ev = heapq.heappop(self._heap)
+        if time < self.now - 1e-15:
+            raise RuntimeError(
+                f"event {ev.kind!r} at t={time} fires before now={self.now}"
+            )
+        self.now = max(self.now, time)
+        self.popped += 1
+        return ev

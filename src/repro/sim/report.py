@@ -1,0 +1,159 @@
+"""The frozen ``SimReport`` artifact: what-if curves you can plan from.
+
+A ``SimReport`` is the simulator's counterpart of ``Plan``/``ServePlan``:
+a JSON-serializable, byte-deterministic record of every simulated
+(policy x fleet x fabric) cell — scaling-efficiency and iteration-time
+curves plus the calibration section that anchors them to real runs.
+``best_policy`` makes the artifact directly reusable as a plan-selection
+input: pick the argmin-t_iter policy for the fleet you intend to run,
+exactly as ``Tuner.sweep`` does for measured costs.
+
+Determinism contract: ``to_json`` serializes with sorted keys and no
+timestamps, and every number is a pure function of the specs and seeds
+that produced it — identical seeds => byte-identical report (asserted by
+``BENCH_sim.json``'s determinism cell and ``tests/test_sim.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any
+
+SIM_REPORT_FORMAT = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SimRow:
+    """One simulated (policy x fleet x fabric) cell.
+
+    ``t_iter_s``/``efficiency`` are means over the replayed iterations;
+    ``n_groups`` is the final schedule's merge-set size."""
+
+    arch: str
+    policy: str
+    fabric: str
+    n_hosts: int
+    n_groups: int
+    t_iter_s: float
+    t_compute_s: float
+    t_comm_exposed_s: float
+    efficiency: float
+
+    def to_json_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def row_from_replay(result, arch: str, fabric: str, n_hosts: int) -> SimRow:
+    """Condense one ``TrainReplayResult`` into a report row (means over
+    its iterations; the last iteration's group count)."""
+    last = result.iterations[-1]
+    return SimRow(
+        arch=arch,
+        policy=result.policy,
+        fabric=fabric,
+        n_hosts=int(n_hosts),
+        n_groups=int(last["n_groups"]),
+        t_iter_s=result.mean_t_iter,
+        t_compute_s=sum(r["t_compute_s"] for r in result.iterations)
+        / len(result.iterations),
+        t_comm_exposed_s=sum(r["t_comm_exposed_s"] for r in result.iterations)
+        / len(result.iterations),
+        efficiency=result.mean_efficiency,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimReport:
+    """Frozen what-if record: rows + calibration + provenance."""
+
+    rows: tuple[SimRow, ...]
+    calibration: dict[str, Any] = dataclasses.field(default_factory=dict)
+    provenance: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def select(
+        self,
+        *,
+        arch: str | None = None,
+        fabric: str | None = None,
+        n_hosts: int | None = None,
+        policy: str | None = None,
+    ) -> tuple[SimRow, ...]:
+        """Rows matching every given filter (None = any)."""
+        return tuple(
+            r
+            for r in self.rows
+            if (arch is None or r.arch == arch)
+            and (fabric is None or r.fabric == fabric)
+            and (n_hosts is None or r.n_hosts == n_hosts)
+            and (policy is None or r.policy == policy)
+        )
+
+    def best_policy(
+        self,
+        *,
+        arch: str | None = None,
+        fabric: str | None = None,
+        n_hosts: int | None = None,
+    ) -> str:
+        """Argmin-``t_iter_s`` policy over the matching rows — the
+        plan-selection read of the artifact (ties break by group count
+        then name, mirroring ``Tuner.sweep``)."""
+        rows = self.select(arch=arch, fabric=fabric, n_hosts=n_hosts)
+        if not rows:
+            raise ValueError(
+                f"no rows match arch={arch} fabric={fabric} n_hosts={n_hosts}"
+            )
+        return min(rows, key=lambda r: (r.t_iter_s, r.n_groups, r.policy)).policy
+
+    def efficiency_table(self) -> list[str]:
+        """Human-readable per-(fleet, policy) scaling-efficiency lines —
+        what ``launch/simulate.py --sweep-hosts`` prints."""
+        lines = []
+        for r in self.rows:
+            lines.append(
+                f"{r.arch},{r.fabric},hosts={r.n_hosts},{r.policy},"
+                f"groups={r.n_groups},t_iter_ms={r.t_iter_s * 1e3:.3f},"
+                f"exposed_ms={r.t_comm_exposed_s * 1e3:.3f},eff={r.efficiency:.4f}"
+            )
+        return lines
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json_dict(self) -> dict[str, Any]:
+        return {
+            "format": SIM_REPORT_FORMAT,
+            "rows": [r.to_json_dict() for r in self.rows],
+            "calibration": dict(self.calibration),
+            "provenance": dict(self.provenance),
+        }
+
+    def to_json(self) -> str:
+        """Canonical byte-deterministic serialization (sorted keys, no
+        timestamps): identical seeds => identical bytes."""
+        return json.dumps(self.to_json_dict(), indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json_dict(cls, d: dict[str, Any]) -> "SimReport":
+        if d.get("format") != SIM_REPORT_FORMAT:
+            raise ValueError(f"unsupported sim report format {d.get('format')!r}")
+        return cls(
+            rows=tuple(SimRow(**r) for r in d["rows"]),
+            calibration=dict(d.get("calibration", {})),
+            provenance=dict(d.get("provenance", {})),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "SimReport":
+        return cls.from_json_dict(json.loads(text))
+
+    def save(self, path: str | pathlib.Path) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json())
+        return p
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "SimReport":
+        return cls.from_json(pathlib.Path(path).read_text())

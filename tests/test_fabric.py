@@ -31,6 +31,12 @@ from repro.fabric import (
 )
 
 PRESETS = ("tpu_v5e", "gpu_nccl", "dcn_only", "paper_10gbe")
+#: Hierarchical tree/pipeline presets (Wang & Vuduc): covered by the
+#: preset-wide invariants but not the ring-phase algebra tests (a tree
+#: all-reduce is not rs ∘ ag, and its startup can undercut a ring
+#: all_gather's — that asymmetry is the point of the presets).
+HIER_PRESETS = ("tree_10gbe", "pipeline_10gbe", "tpu_v5e_tree_dcn")
+ALL_PRESETS = PRESETS + HIER_PRESETS
 #: Representative psum axis sets (single-axis, multi-ICI, cross-pod).
 AXIS_CASES = (
     {"data": 8},
@@ -98,7 +104,7 @@ class TestFabricAlgebra:
             assert (m.a, m.b) == (0.0, 0.0)
 
     def test_every_preset_prices_every_op(self):
-        for preset in PRESETS:
+        for preset in ALL_PRESETS:
             f = get_fabric(preset)
             for op in Collective:
                 for axes in AXIS_CASES:
@@ -110,11 +116,18 @@ class TestFabricAlgebra:
 
 class TestRegistry:
     def test_round_trip_and_protocol(self):
-        for preset in PRESETS:
+        for preset in ALL_PRESETS:
             f = get_fabric(preset)
             assert isinstance(f, Fabric)
             assert f.name == preset
-        assert set(PRESETS) <= set(available_fabrics())
+        assert set(ALL_PRESETS) <= set(available_fabrics())
+
+    def test_available_fabrics_is_sorted_list(self):
+        """The registry listing is a sorted list — stable display order,
+        directly usable as argparse choices."""
+        names = available_fabrics()
+        assert isinstance(names, list)
+        assert names == sorted(names)
 
     def test_unknown_name_errors_with_known_list(self):
         with pytest.raises(KeyError, match="tpu_v5e"):
@@ -280,7 +293,7 @@ class TestServePlan:
         from repro.planning import build_serve_plan
 
         cfg, shapes = _serve_inputs()
-        for preset in PRESETS:
+        for preset in ALL_PRESETS:
             plan = build_serve_plan(cfg, shapes, preset, {"model": 8},
                                     batch_rows=16)
             assert plan.schedule.groups[0][0] == 1

@@ -347,3 +347,55 @@ class TestStepFixedModel:
         plain = group_comparison_lines(
             self._plan(), tuple(0.0 for _ in self._plan().schedule.groups))
         assert len(plain) == len(self._plan().schedule.groups)
+
+
+class TestServePlanCapacityModel:
+    """Direct contracts for ``predicted_completion_s`` /
+    ``capacity_tok_per_s`` — the terms fleet admission and the what-if
+    simulator price ETAs and scale decisions with."""
+
+    def _plan(self):
+        cfg = _reduced_cfg()
+        return build_serve_plan(cfg, param_specs(cfg), "tpu_v5e",
+                                {"model": 4}, batch_rows=2)
+
+    def test_completion_scales_linearly_in_tokens(self):
+        plan = self._plan()
+        step = plan.predicted_step_time()
+        assert plan.predicted_completion_s(1) == pytest.approx(step)
+        assert plan.predicted_completion_s(17) == pytest.approx(17 * step)
+
+    def test_completion_zero_and_negative_tokens_clamp_to_zero(self):
+        plan = self._plan()
+        assert plan.predicted_completion_s(0) == 0.0
+        assert plan.predicted_completion_s(-5) == 0.0
+
+    def test_capacity_is_rows_per_step(self):
+        plan = self._plan()
+        step = plan.predicted_step_time()
+        assert plan.capacity_tok_per_s(1) == pytest.approx(1.0 / step)
+        assert plan.capacity_tok_per_s(8) == pytest.approx(8.0 / step)
+
+    def test_capacity_zero_rows_is_zero_not_none(self):
+        """An idle replica has zero capacity — a priced answer, not a
+        missing one (None is reserved for un-evaluated schedules)."""
+        plan = self._plan()
+        assert plan.capacity_tok_per_s(0) == 0.0
+
+    def test_unevaluated_schedule_prices_nothing(self):
+        """Gate-empty plan: no evaluated timeline => both terms are None
+        (admission must refuse to price, not price garbage)."""
+        plan = self._plan()
+        gutted = dataclasses.replace(
+            plan, schedule=dataclasses.replace(plan.schedule, result=None))
+        assert gutted.predicted_step_time() is None
+        assert gutted.predicted_completion_s(4) is None
+        assert gutted.capacity_tok_per_s(4) is None
+
+    def test_step_fixed_feeds_both_terms(self):
+        """The calibrated fixed term moves completion and capacity
+        together — they stay mutually consistent views of one step."""
+        cal = self._plan().with_step_fixed(1e-2)
+        step = cal.predicted_step_time()
+        assert cal.predicted_completion_s(3) == pytest.approx(3 * step)
+        assert cal.capacity_tok_per_s(5) == pytest.approx(5.0 / step)

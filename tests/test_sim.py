@@ -1,0 +1,371 @@
+"""What-if simulator (``repro.sim``): the deterministic event core, the
+ClusterSpec fleet geometry, the DES == ``core.timeline.evaluate``
+exactness invariant, straggler/elastic/serve replay semantics, the
+hierarchical tree/pipeline fabrics, calibration against the committed
+BENCH records, the paper's scaling-efficiency ordering, and the
+byte-deterministic ``SimReport`` artifact."""
+
+import json
+import math
+
+import pytest
+
+from repro.configs.cnn_profiles import cnn_layer_costs
+from repro.core.comm_model import binary_tree
+from repro.core.cost_model import K80_CALIBRATED
+from repro.core.timeline import evaluate
+from repro.fabric import Collective, get_fabric
+from repro.planning.registry import build_schedule
+from repro.sim import (
+    MAX_HOSTS,
+    ClusterEvent,
+    ClusterSpec,
+    EventQueue,
+    SimReport,
+    calibrate_serve,
+    calibrate_train,
+    replay_serve,
+    replay_train,
+    row_from_replay,
+    simulate_train_iteration,
+)
+
+
+def _paper_cell(arch="googlenet", batch=64, n=8):
+    """(costs, ar_model) for one paper-cluster cell."""
+    costs = cnn_layer_costs(arch, batch)
+    ar = ClusterSpec(n_hosts=n, fabric="paper_10gbe").ar_model()
+    return costs, ar
+
+
+class TestEventQueue:
+    def test_orders_by_time_then_insertion(self):
+        q = EventQueue()
+        q.push(2.0, "late")
+        q.push(1.0, "tie_first", tag=1)
+        q.push(1.0, "tie_second", tag=2)
+        kinds = [q.pop().kind for _ in range(3)]
+        assert kinds == ["tie_first", "tie_second", "late"]
+        assert (q.pushed, q.popped) == (3, 3)
+
+    def test_negative_time_rejected(self):
+        with pytest.raises(ValueError, match="negative"):
+            EventQueue().push(-1e-9, "bad")
+
+    def test_empty_pop_raises(self):
+        with pytest.raises(IndexError):
+            EventQueue().pop()
+
+    def test_time_regression_is_a_bug_not_a_race(self):
+        q = EventQueue()
+        q.push(1.0, "a")
+        q.pop()
+        q.push(0.5, "past")
+        with pytest.raises(RuntimeError, match="before now"):
+            q.pop()
+
+
+class TestClusterSpec:
+    def test_flat_and_two_tier_axes(self):
+        flat = ClusterSpec(n_hosts=8)
+        assert flat.axis_sizes() == {"data": 8}
+        tiered = ClusterSpec(n_hosts=64, ici_size=16)
+        assert tiered.axis_sizes() == {"data": 16, "pod": 4}
+        # shrink below one domain collapses back to a flat fast tier
+        assert tiered.axis_sizes(12) == {"data": 12}
+
+    def test_bench_geometry_prices_like_the_committed_sweep(self):
+        """The calibration cluster's ar model IS the benchmark's
+        tpu_psum_model({'pod': 2, 'data': 16}) — same floats."""
+        from repro.core import tpu_psum_model
+
+        spec = ClusterSpec(n_hosts=32, ici_size=16, fabric="tpu_v5e")
+        got = spec.ar_model()
+        ref = tpu_psum_model({"pod": 2, "data": 16})
+        assert (got.a, got.b) == (ref.a, ref.b)
+
+    def test_json_round_trip_exact(self):
+        spec = ClusterSpec(
+            n_hosts=64, ici_size=16, fabric="pipeline_10gbe",
+            straggler_spread=0.3, seed=7,
+            events=(ClusterEvent(at_iter=2, kind="kill", count=4),),
+        )
+        rt = ClusterSpec.from_json(spec.to_json())
+        assert rt == spec
+        assert rt.to_json() == spec.to_json()  # byte-stable too
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ClusterSpec(n_hosts=0)
+        with pytest.raises(ValueError):
+            ClusterSpec(n_hosts=MAX_HOSTS + 1)
+        with pytest.raises(ValueError, match="kind"):
+            ClusterEvent(at_iter=0, kind="explode")
+        with pytest.raises(ValueError):
+            ClusterEvent(at_iter=-1, kind="kill")
+
+    def test_straggler_draw_seeded_and_stable_across_shrink(self):
+        spec = ClusterSpec(n_hosts=8, straggler_spread=0.5, seed=3)
+        m8 = spec.straggler_multipliers()
+        assert m8 == spec.straggler_multipliers()  # pure function of seed
+        assert all(1.0 <= m <= 1.5 for m in m8)
+        assert len(set(m8)) > 1  # actually heterogeneous
+        # host i keeps its multiplier when the fleet shrinks
+        assert spec.straggler_multipliers(5) == m8[:5]
+        homog = ClusterSpec(n_hosts=8)
+        assert homog.straggler_multipliers() == (1.0,) * 8
+
+    def test_alive_after_applies_events_in_order(self):
+        spec = ClusterSpec(
+            n_hosts=16,
+            events=(ClusterEvent(at_iter=1, kind="shrink", count=8),
+                    ClusterEvent(at_iter=3, kind="grow", count=4),
+                    ClusterEvent(at_iter=5, kind="kill", count=2)),
+        )
+        assert spec.alive_after(0) == (16, 0)
+        assert spec.alive_after(1) == (8, 0)
+        assert spec.alive_after(3) == (12, 0)
+        assert spec.alive_after(5) == (10, 2)
+        # a kill storm can never drop the fleet below one host
+        doomed = ClusterSpec(
+            n_hosts=2, events=(ClusterEvent(at_iter=0, kind="kill", count=99),))
+        assert doomed.alive_after(0) == (1, 99)
+
+
+class TestExactnessInvariant:
+    """With homogeneous multipliers the DES is not 'close to' the analytic
+    timeline — it is the same floats, trace row by trace row.  This is
+    the invariant the calibration layer leans on."""
+
+    @pytest.mark.parametrize("policy", ["synceasgd", "wfbp", "mg_wfbp"])
+    def test_des_matches_evaluate_bit_for_bit(self, policy):
+        costs, ar = _paper_cell()
+        sched = build_schedule(policy, list(costs), ar, hw=K80_CALIBRATED)
+        ref = evaluate(list(sched.groups), list(costs), ar, hw=K80_CALIBRATED)
+        sim = simulate_train_iteration(
+            sched.groups, list(costs), ar, hw=K80_CALIBRATED,
+            multipliers=(1.0,) * 8)
+        assert sim.t_iter == ref.t_iter  # == on floats, deliberately
+        assert sim.groups == tuple(ref.groups)
+        assert sim.n_events == 8 * len(sched.groups)
+
+    def test_multiplier_validation(self):
+        costs, ar = _paper_cell()
+        with pytest.raises(ValueError, match="at least one"):
+            simulate_train_iteration([(1, len(costs))], list(costs), ar,
+                                     hw=K80_CALIBRATED, multipliers=())
+        with pytest.raises(ValueError, match=">= 1"):
+            simulate_train_iteration([(1, len(costs))], list(costs), ar,
+                                     hw=K80_CALIBRATED, multipliers=(0.5,))
+
+
+class TestStragglers:
+    def test_slowest_host_sets_the_compute_wall(self):
+        costs, ar = _paper_cell()
+        sched = build_schedule("mg_wfbp", list(costs), ar, hw=K80_CALIBRATED)
+        base = simulate_train_iteration(sched.groups, list(costs), ar,
+                                        hw=K80_CALIBRATED)
+        slow = simulate_train_iteration(sched.groups, list(costs), ar,
+                                        hw=K80_CALIBRATED,
+                                        multipliers=(1.0, 1.0, 1.4))
+        assert slow.t_compute == pytest.approx(1.4 * (base.t_f + base.t_b))
+        assert slow.t_iter >= base.t_iter
+        # efficiency is judged against the *baseline* compute (Eq. 4), so
+        # straggling shows up as lost efficiency, not a moved goalpost
+        assert slow.scaling_efficiency < base.scaling_efficiency
+
+    def test_t_iter_monotone_in_spread(self):
+        costs = cnn_layer_costs("googlenet", 64)
+        t = [
+            replay_train(
+                ClusterSpec(n_hosts=16, fabric="paper_10gbe",
+                            straggler_spread=s, seed=5),
+                list(costs), "mg_wfbp", hw=K80_CALIBRATED,
+            ).mean_t_iter
+            for s in (0.0, 0.25, 0.5)
+        ]
+        assert t[0] <= t[1] <= t[2]
+
+
+class TestElasticReplay:
+    def test_transitions_reprice_and_replan(self):
+        costs = cnn_layer_costs("googlenet", 64)
+        spec = ClusterSpec(
+            n_hosts=64, fabric="paper_10gbe",
+            events=(ClusterEvent(at_iter=1, kind="shrink", count=56),
+                    ClusterEvent(at_iter=3, kind="grow", count=56)),
+        )
+        res = replay_train(spec, list(costs), "mg_wfbp",
+                           hw=K80_CALIBRATED, n_iters=5)
+        assert [r["n_alive"] for r in res.iterations] == [64, 8, 8, 64, 64]
+        assert res.n_replans == 2
+        assert [r["replanned"] for r in res.iterations] == [
+            False, True, False, True, False]
+        # 8-host comm is strictly cheaper than 64-host on the same policy:
+        # the ring startup scales with N, and the merge set re-fits
+        by_alive = {r["n_alive"]: r for r in res.iterations}
+        assert by_alive[8]["t_iter_s"] < by_alive[64]["t_iter_s"]
+
+    def test_kills_are_tallied(self):
+        costs = cnn_layer_costs("googlenet", 64)
+        spec = ClusterSpec(
+            n_hosts=8, events=(ClusterEvent(at_iter=1, kind="kill", count=3),))
+        res = replay_train(spec, list(costs), "wfbp",
+                           hw=K80_CALIBRATED, n_iters=2)
+        assert res.n_kills == 3
+        assert res.iterations[-1]["n_alive"] == 5
+
+
+class TestServeReplay:
+    def _load(self, n=8, tokens=16, deadline=None):
+        from repro.serving.fleet import LoadSpec
+
+        return LoadSpec(n_requests=n, prompt_len=1, max_new_tokens=tokens,
+                        kind="trace", trace_arrivals_s=(0.0,) * n,
+                        deadline_s=deadline, seed=0)
+
+    def test_deterministic_and_token_conserving(self):
+        a = replay_serve(self._load(), 0.01, n_replicas=2, slots=2)
+        b = replay_serve(self._load(), 0.01, n_replicas=2, slots=2)
+        assert a == b
+        assert a.completed == 8 and a.shed == a.lost == 0
+        assert a.tokens_emitted == 8 * 16
+
+    def test_slot_bound_admission(self):
+        """2 slots x 1 replica x 8 requests of 16 tokens: at most 2 tokens
+        per step, so >= 64 steps — no mid-step free riders."""
+        one = replay_serve(self._load(), 0.01, n_replicas=1, slots=2)
+        assert one.steps >= 64
+        assert one.duration_s == pytest.approx(one.steps * 0.01)
+
+    def test_kill_fails_over_with_progress_preserved(self):
+        sv = replay_serve(self._load(), 0.01, n_replicas=2, slots=4,
+                          kill_at_s={0: 0.035})
+        assert sv.failovers >= 1
+        assert sv.completed == 8 and sv.lost == 0
+        # work is conserved: the survivor finishes every request
+        assert sv.tokens_emitted <= 8 * 16  # kill may eat an in-flight step
+        solo = replay_serve(self._load(), 0.01, n_replicas=1, slots=4)
+        assert sv.duration_s >= solo.duration_s * 0.5  # sanity, not perf
+
+    def test_all_replicas_dead_loses_requests(self):
+        sv = replay_serve(self._load(n=4), 0.01, n_replicas=1, slots=4,
+                          kill_at_s={0: 0.005})
+        assert sv.lost + sv.failovers >= 1
+        assert sv.completed < 4
+
+    def test_deadline_sheds_at_admission(self):
+        sv = replay_serve(self._load(deadline=1e-9), 0.01,
+                          n_replicas=2, slots=2)
+        assert sv.shed == 8 and sv.completed == 0 and sv.tokens_emitted == 0
+
+    def test_bad_step_rejected(self):
+        with pytest.raises(ValueError, match="step_s"):
+            replay_serve(self._load(), 0.0)
+
+
+class TestHierarchicalFabrics:
+    def test_tree_startup_is_log_n(self):
+        f = get_fabric("tree_10gbe")
+        for n in (8, 64, 512):
+            got = f.cost(Collective.ALL_REDUCE, {"data": n})
+            ref = binary_tree(n, f.ici_alpha, 1.0 / f.ici_link_bw, f.gamma)
+            assert got.a == pytest.approx(ref.a, rel=1e-12)
+            assert got.b == pytest.approx(ref.b, rel=1e-12)
+
+    def test_pipeline_beats_ring_startup_and_tree_bandwidth_at_512(self):
+        ring = get_fabric("paper_10gbe").cost("all_reduce", {"data": 512})
+        tree = get_fabric("tree_10gbe").cost("all_reduce", {"data": 512})
+        pipe = get_fabric("pipeline_10gbe").cost("all_reduce", {"data": 512})
+        assert pipe.a < ring.a  # O(lg N) startup vs O(N)
+        assert pipe.b < tree.b  # near-ring bandwidth vs lg N penalty
+        # and the crossover is real: at 100 MB the pipeline wins both
+        M = 100 * 1024 * 1024
+        assert pipe(M) < ring(M) and pipe(M) < tree(M)
+
+    def test_unknown_tier_algo_rejected(self):
+        from repro.fabric import HierarchicalFabric
+
+        with pytest.raises(ValueError, match="algorithm"):
+            HierarchicalFabric(ici_algo="carrier_pigeon")
+
+    def test_trivial_tier_is_free(self):
+        from repro.fabric.hierarchical import pipeline_tree
+
+        m = pipeline_tree(1, 45e-6, 1e-9, 1e-10)
+        assert (m.a, m.b) == (0.0, 0.0)
+
+
+class TestCalibration:
+    def test_train_replay_reproduces_committed_planning_rows(self):
+        rep = calibrate_train()
+        assert rep.ok and len(rep.rows) >= 30
+        # the DES at the benchmark geometry IS the committed evaluator:
+        # exact agreement, not just within budget
+        assert rep.max_ratio == pytest.approx(1.0, abs=1e-9)
+
+    def test_serve_replay_within_budget(self):
+        rep = calibrate_serve()
+        assert rep.ok
+        assert 1.0 <= rep.max_ratio <= rep.budget
+        names = {r.name.split("/")[-1] for r in rep.rows}
+        assert names == {"decode_step_s", "decode_tok_per_s"}
+
+    def test_report_json_shape(self):
+        rep = calibrate_serve()
+        d = rep.to_json_dict()
+        assert d["kind"] == "serve" and d["ok"] is True
+        assert all(r["ratio"] >= 1.0 for r in d["rows"])
+
+
+class TestPaperOrdering:
+    def test_mgwfbp_beats_wfbp_beats_synceasgd_at_8_nodes(self):
+        """Figs. 6-7 regime: paper batches, 8-node 10GbE."""
+        effs = {}
+        for arch, batch in (("googlenet", 64), ("resnet50", 32)):
+            costs = cnn_layer_costs(arch, batch)
+            spec = ClusterSpec(n_hosts=8, fabric="paper_10gbe")
+            for p in ("synceasgd", "wfbp", "mg_wfbp"):
+                res = replay_train(spec, list(costs), p, hw=K80_CALIBRATED)
+                effs[p] = res.mean_efficiency
+            assert effs["mg_wfbp"] > effs["wfbp"] > effs["synceasgd"], (
+                arch, effs)
+
+
+class TestSimReport:
+    def _report(self):
+        costs = cnn_layer_costs("googlenet", 64)
+        rows = []
+        for n in (4, 8):
+            spec = ClusterSpec(n_hosts=n, fabric="paper_10gbe")
+            for p in ("wfbp", "mg_wfbp"):
+                res = replay_train(spec, list(costs), p, hw=K80_CALIBRATED)
+                rows.append(row_from_replay(res, "googlenet", "paper_10gbe", n))
+        return SimReport(rows=tuple(rows), provenance={"source": "test"})
+
+    def test_byte_identical_across_builds(self):
+        assert self._report().to_json() == self._report().to_json()
+
+    def test_round_trip_and_select(self):
+        rep = self._report()
+        rt = SimReport.from_json(rep.to_json())
+        assert rt == rep
+        assert len(rep.select(n_hosts=8)) == 2
+        assert rep.select(policy="wfbp", n_hosts=4)[0].policy == "wfbp"
+        assert rep.best_policy(n_hosts=8) == "mg_wfbp"
+        with pytest.raises(ValueError, match="no rows"):
+            rep.best_policy(n_hosts=512)
+
+    def test_save_load_and_bad_format(self, tmp_path):
+        rep = self._report()
+        p = rep.save(tmp_path / "report.json")
+        assert SimReport.load(p) == rep
+        d = json.loads(rep.to_json())
+        d["format"] = 99
+        with pytest.raises(ValueError, match="format"):
+            SimReport.from_json_dict(d)
+
+    def test_efficiency_table_lines(self):
+        lines = self._report().efficiency_table()
+        assert len(lines) == 4
+        assert all("eff=" in ln and "t_iter_ms=" in ln for ln in lines)
