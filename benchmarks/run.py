@@ -38,7 +38,11 @@ def write_bench(name: str, record, rows: list[str], gate=None) -> pathlib.Path:
     stash the checked-in JSON there before re-running a suite), the gate
     runs as ``gate(record, baseline_record)`` BEFORE the new record is
     written — a regressed run raises and never publishes, so the
-    committed trajectory only ever moves forward."""
+    committed trajectory only ever moves forward.
+
+    Records are serialized with sorted keys so a committed BENCH file
+    round-trips byte-identically through ``json.loads`` + this writer —
+    the schema test (tests/test_bench_records.py) pins that."""
     out = pathlib.Path(__file__).parent / "results" / f"BENCH_{name}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     base_dir = os.environ.get("BENCH_BASELINE_DIR")
@@ -49,7 +53,7 @@ def write_bench(name: str, record, rows: list[str], gate=None) -> pathlib.Path:
             rows.append(f"gate vs {base_path}: ok")
         else:
             rows.append(f"gate skipped: no baseline at {base_path}")
-    out.write_text(json.dumps(record, indent=1))
+    out.write_text(json.dumps(record, indent=1, sort_keys=True) + "\n")
     rows.append(f"wrote {out}")
     return out
 
@@ -610,6 +614,138 @@ def wire_layout() -> list[str]:
     return rows
 
 
+def overlap() -> list[str]:
+    """Measured DAG-overlap acceptance -> ``BENCH_overlap.json``.
+
+    Runs the same reduced arch through both communication issue orders —
+    ``post`` (every merged all-reduce after the whole backward) and
+    ``dag`` (each group's all-reduce at its last-gradient event inside
+    backward) — under the span recorder, and prices the contrast from
+    the PARSED TRACE, not the timeline model:
+
+      * ``overlap_fraction`` (comm inside the backward window) must be
+        > 0 for dag and 0 for post — re-asserted by the
+        ``overlap-smoke`` CI job and the baseline gate;
+      * every comm span must carry its group's exact wire bytes;
+      * the dag step must still lower to ONE all-reduce per schedule
+        group (small slack for the loss pmean etc.);
+      * dag and post losses must agree bit-exactly — reordering the
+        issue points must not change the arithmetic.
+    """
+    import dataclasses as _dc
+    import re as _re
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import make_mesh, set_mesh
+    from repro.configs import get_reduced
+    from repro.core.comm_model import AllReduceModel
+    from repro.core.profiler import TraceRecorder, overlap_report
+    from repro.core.sync import SyncConfig
+    from repro.core.trainer import MGWFBPEngine
+    from repro.launch.specs import param_specs
+    from repro.models.transformer import init_params
+    from repro.optim import make_optimizer
+
+    rows = ["table=overlap"]
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",))
+    cfg = _dc.replace(get_reduced("tinyllama-1.1b"), param_dtype=jnp.float32)
+    eng = MGWFBPEngine.build(
+        cfg, param_specs(cfg), dp_axes=("data",),
+        ar_model=AllReduceModel(a=5e-5, b=1e-9),
+        tokens_per_device=1024, method="wfbp",  # one group per unit
+        sync_config=SyncConfig(fuse="arena"),
+    )
+    n_groups = len(eng.schedule.groups)
+    opt = make_optimizer("sgd", momentum=0.9)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    batch = {"targets": jax.random.randint(key, (8, 64), 0, cfg.vocab)}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(key, (8, 64, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(key, (8, 64), 0, cfg.vocab)
+
+    record: dict = {
+        "arch": cfg.name,
+        "policy": "wfbp",
+        "fuse": "arena",
+        "n_groups": n_groups,
+        "n_devices": n_dev,
+        "group_wire_bytes": [int(b) for b in eng.sync.group_wire_bytes],
+    }
+    reports = {}
+    for issue in ("post", "dag"):
+        rec = TraceRecorder()
+        step = eng.make_train_step(opt, mesh, lr=1e-2, issue=issue, recorder=rec)
+
+        def call(step=step):  # the step donates params/opt_state buffers
+            p0 = jax.tree.map(jnp.array, params)
+            return step(p0, opt.init(p0), batch)
+
+        with set_mesh(mesh):
+            hlo = step.lower(params, opt.init(params), batch).compile().as_text()
+            n_ar = len(_re.findall(r" all-reduce\(", hlo))
+            # steady-state trace: drop the compile step's spans
+            p, o, m = call()
+            jax.block_until_ready(p)
+            jax.effects_barrier()
+            rec.clear()
+            p, o, m = call()
+            jax.block_until_ready(p)
+        jax.effects_barrier()
+        rep = overlap_report(rec.spans())
+        reports[issue] = rep
+        record[issue] = {
+            "loss": float(m["loss"]),
+            "allreduce_ops": n_ar,
+            **{k: rep[k] for k in (
+                "n_comm_spans", "n_bwd_spans", "total_comm_us",
+                "windowed_comm_us", "hidden_comm_us", "overlap_fraction",
+                "hidden_fraction", "n_overlapped_starts",
+            )},
+            "groups": rep["groups"],
+        }
+        rows.append(
+            f"{issue},groups={n_groups},allreduce_ops={n_ar},"
+            f"overlap_fraction={rep['overlap_fraction']:.3f},"
+            f"overlapped_starts={rep['n_overlapped_starts']}/{rep['n_comm_spans']},"
+            f"loss={float(m['loss']):.6f}"
+        )
+
+    # trace-proved acceptance: the wire moved inside backward under dag
+    assert record["dag"]["overlap_fraction"] > 0.0, record["dag"]
+    assert record["dag"]["n_overlapped_starts"] > 0, record["dag"]
+    assert record["post"]["n_overlapped_starts"] == 0, record["post"]
+    assert record["dag"]["overlap_fraction"] > record["post"]["overlap_fraction"]
+    # one merged all-reduce per group (slack: loss pmean & friends)
+    for issue in ("post", "dag"):
+        assert n_groups <= record[issue]["allreduce_ops"] <= n_groups + 4, record
+    # per-group spans carry the exact wire bytes of their arena
+    by_group: dict[int, int] = {}
+    for g in reports["dag"]["groups"]:
+        by_group.setdefault(g["group"], g["bytes"])
+        assert g["bytes"] == by_group[g["group"]]
+    assert sorted(by_group) == list(range(n_groups)), by_group
+    for gi, nbytes in by_group.items():
+        assert nbytes == record["group_wire_bytes"][gi], (gi, nbytes)
+    # issue order must not change the arithmetic
+    assert record["dag"]["loss"] == record["post"]["loss"], record
+    record["loss_bit_identical"] = True
+    rows.append(f"loss_bit_identical=True,"
+                f"wire_bytes={sum(record['group_wire_bytes'])}")
+
+    def gate(rec, base):
+        assert rec["dag"]["overlap_fraction"] > 0.0
+        assert rec["post"]["n_overlapped_starts"] == 0
+        assert rec["loss_bit_identical"]
+
+    write_bench("overlap", record, rows, gate=gate)
+    return rows
+
+
 def serve_resilience() -> list[str]:
     """Chaos-injected serving acceptance -> ``BENCH_serve_resilience.json``.
 
@@ -1138,7 +1274,7 @@ def main() -> None:
 
     tables = list(ALL_TABLES) + [
         planning_sweep, wire_layout, tuner, fabric_sweep, serve_exec,
-        serve_resilience, serve_fleet, sim, roofline_summary,
+        overlap, serve_resilience, serve_fleet, sim, roofline_summary,
     ]
     if args.only:
         wanted = {n.strip() for n in args.only.split(",")}

@@ -43,7 +43,7 @@ import itertools
 
 from .comm_model import AllReduceModel
 from .cost_model import Hardware, LayerCost, TPU_V5E
-from .timeline import TimelineResult, evaluate
+from .timeline import TimelineResult, comm_avail_times, evaluate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +121,7 @@ def mg_wfbp_schedule(
     ar_model: AllReduceModel,
     hw: Hardware = TPU_V5E,
     t_f: float | None = None,
+    mode: str = "overlap",
 ) -> Schedule:
     """Paper Algorithm 1: find all merged-gradient layers 𝕄.
 
@@ -130,34 +131,33 @@ def mg_wfbp_schedule(
 
     where τ_b^(l-2) = avail(l-1) is when layer l-1's gradient is ready and
     τ_c^(l) is the communication start of layer l under merges so far.
+    ``mode`` substitutes the availability vector (``timeline.MODES``):
+    under ``serialized`` every gradient becomes communicable only at the
+    end of backward, so the greedy merges everything — the algorithm
+    degenerates to SyncEASGD, which is exactly right when no overlap is
+    possible (startup ``a`` is then paid once).
     """
     L = len(costs)
     if t_f is None:
         t_f = sum(c.t_f(hw) for c in costs)
 
-    # 1-based working arrays (index 0 unused except tau_b[0] = end of backward)
-    tb = [0.0] + [c.t_b(hw) for c in costs]
+    # 1-based working arrays (index 0 unused)
     p = [0] + [c.grad_bytes for c in costs]
     tc = [0.0] + [ar_model(c.grad_bytes) for c in costs]
-
-    tau_b = [0.0] * (L + 1)
-    tau_b[L] = t_f
-    for l in range(L - 1, 0, -1):
-        tau_b[l] = tau_b[l + 1] + tb[l + 1]
-    tau_b0 = tau_b[1] + tb[1]  # τ_b^(0): backward fully done = avail(1)
+    avail = comm_avail_times(costs, hw, t_f, mode)
 
     def calc_comm_start() -> list[float]:
         tau_c = [0.0] * (L + 1)
-        tau_c[L] = tau_b[L] + tb[L]
+        tau_c[L] = avail[L]
         for l in range(L - 1, 0, -1):
-            tau_c[l] = max(tau_c[l + 1] + tc[l + 1], tau_b[l] + tb[l])
+            tau_c[l] = max(tau_c[l + 1] + tc[l + 1], avail[l])
         return tau_c
 
     merged: set[int] = set()
     tau_c = calc_comm_start()
     for l in range(L, 1, -1):
-        # avail of layer l-1's gradient: τ_b^(l-2)  (τ_b^(0) when l == 2)
-        ready_prev = tau_b[l - 2] if l >= 3 else tau_b0
+        # avail of layer l-1's gradient: τ_b^(l-2)  (== avail[l-1])
+        ready_prev = avail[l - 1]
         if ready_prev - tau_c[l] < ar_model.a:
             # MERGE(l): layer l rides with layer l-1
             p[l - 1] += p[l]
@@ -168,7 +168,7 @@ def mg_wfbp_schedule(
             merged.add(l)
 
     groups = groups_from_merged_set(frozenset(merged), L)
-    res = evaluate(list(groups), costs, ar_model, hw, t_f)
+    res = evaluate(list(groups), costs, ar_model, hw, t_f, mode=mode)
     return Schedule(groups=groups, method="mg_wfbp", result=res)
 
 
@@ -178,6 +178,7 @@ def optimal_schedule(
     hw: Hardware = TPU_V5E,
     t_f: float | None = None,
     max_layers: int = 22,
+    mode: str = "overlap",
 ) -> Schedule:
     """Exact minimum-t_iter schedule by exhaustive partition enumeration.
 
@@ -201,7 +202,7 @@ def optimal_schedule(
                 groups.append((lo, l - 1))
                 lo = l
         groups.append((lo, L))
-        res = evaluate(groups, costs, ar_model, hw, t_f)
+        res = evaluate(groups, costs, ar_model, hw, t_f, mode=mode)
         key = (res.t_iter, len(groups), tuple(groups))
         if best is None or key < best:
             best = key
@@ -220,6 +221,7 @@ def dp_optimal_schedule(
     ar_model: AllReduceModel,
     hw: Hardware = TPU_V5E,
     t_f: float | None = None,
+    mode: str = "overlap",
 ) -> Schedule:
     """Exact minimum-t_iter schedule in O(L^2) time (beyond-paper).
 
@@ -234,14 +236,16 @@ def dp_optimal_schedule(
     over *backward positions* k (k = 1 is the paper's layer L) is an exact
     Bellman recursion, with D(L) = optimal t_iter.  This restores the
     optimality that the paper's greedy Algorithm 1 only attains in its
-    benign regime (see module docstring) at the same one-time cost.
+    benign regime (see module docstring) at the same one-time cost.  The
+    recursion is mode-agnostic: ``mode`` only swaps the availability
+    vector (``timeline.comm_avail_times``), so the DP stays exact for the
+    serialized issue order too (where it provably merges everything —
+    equal avail makes one group dominate).
     """
-    from .timeline import gradient_avail_times
-
     L = len(costs)
     if t_f is None:
         t_f = sum(c.t_f(hw) for c in costs)
-    avail_fwd = gradient_avail_times(costs, hw, t_f)  # 1-based by fwd layer
+    avail_fwd = comm_avail_times(costs, hw, t_f, mode)  # 1-based by fwd layer
 
     # backward position k <-> forward layer l = L + 1 - k
     avail = [0.0] * (L + 1)
@@ -270,7 +274,7 @@ def dp_optimal_schedule(
         groups.append((L + 1 - k, L - j))
         k = j
     groups = tuple(sorted(groups))
-    res = evaluate(list(groups), costs, ar_model, hw, t_f)
+    res = evaluate(list(groups), costs, ar_model, hw, t_f, mode=mode)
     return Schedule(groups=groups, method="dp_optimal", result=res)
 
 
@@ -280,7 +284,8 @@ def evaluate_schedule(
     ar_model: AllReduceModel,
     hw: Hardware = TPU_V5E,
     t_f: float | None = None,
+    mode: str = "overlap",
 ) -> Schedule:
     """Attach a TimelineResult to a schedule produced without evaluation."""
-    res = evaluate(list(schedule.groups), costs, ar_model, hw, t_f)
+    res = evaluate(list(schedule.groups), costs, ar_model, hw, t_f, mode=mode)
     return dataclasses.replace(schedule, result=res)

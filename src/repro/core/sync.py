@@ -125,11 +125,21 @@ class SyncConfig:
         return self.comm_dtype
 
 
+def device_index(dp_axes: tuple[str, ...]):
+    """Flat device index over the (manual) DP axes — the trace recorder's
+    per-device span attribution key.  Must run inside shard_map."""
+    idx = 0
+    for ax in dp_axes:
+        idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
 def make_gradient_sync(
     layout: ParamLayout,
     schedule: Schedule,
     dp_axes: tuple[str, ...],
     config: SyncConfig = SyncConfig(),
+    recorder=None,
 ) -> Callable[..., Pytree]:
     """Build ``sync_fn(grads) -> reduced_grads`` for use inside shard_map.
 
@@ -140,6 +150,20 @@ def make_gradient_sync(
     ``sync_fn(grads, residual) -> (reduced_grads, new_residual)`` where
     ``residual`` is an f32 pytree of ``grads``' structure (zeros to
     start) carrying each device's local quantization error.
+
+    The returned closure exposes the per-group seam the DAG train step
+    issues through: ``sync.sync_group(gi, grads, out, residual=None) ->
+    (out, residual)`` reduces backward-order group ``gi`` alone, reading
+    that group's gradient paths from ``grads`` and writing the reduced
+    values into ``out`` — so a caller that knows *when* group ``gi``'s
+    last gradient lands can place the all-reduce at exactly that event.
+    ``sync(grads)`` is simply all groups in backward order.
+
+    ``recorder`` (a ``profiler.TraceRecorder``) plants data-dependent
+    span markers around each group's reduction: the begin marker consumes
+    the on-wire value (fires when the merged gradient is ready), the end
+    marker consumes the reduced result — the ``wfbp_group{gi}_l{lo}_{hi}``
+    spans the overlap report parses.
     """
     if config.fuse not in ("concat", "variadic", "arena"):
         raise ValueError(f"unknown fuse mode {config.fuse!r}")
@@ -158,52 +182,68 @@ def make_gradient_sync(
         for units in reversed(bucket_assignment(layout, schedule))
     )
 
-    def sync(grads: Pytree, residual: Pytree | None = None):
-        if stateful and residual is None:
-            raise ValueError("compression='bf16_ef' needs the residual pytree")
+    def _marked_issue(name: str, gi: int, val, dp_axes_):
+        """The group's psum, optionally bracketed by trace markers."""
+        if recorder is None:
+            return issue(Collective.ALL_REDUCE, val, dp_axes_)
+        dev = device_index(dp_axes_)
+        val = recorder.span_begin(name, val, device=dev, nbytes=group_wire_bytes[gi])
+        red = issue(Collective.ALL_REDUCE, val, dp_axes_)
+        return recorder.span_end(name, red, device=dev)
+
+    def sync_group(gi: int, grads: Pytree, out: Pytree, residual: Pytree | None = None):
+        """Reduce group ``gi`` (backward issue order) only."""
+        entries = group_entries[gi]
+        lo, hi = group_spans[gi]
         world = 1.0
         for ax in dp_axes:
             world *= axis_size(ax)
+        name = f"wfbp_group{gi}_l{lo}_{hi}"
+        with jax.named_scope(name):
+            if config.fuse == "arena":
+                return _arena_group(
+                    entries, grads, out, residual, dp_axes, world, config,
+                    issue_fn=lambda v: _marked_issue(name, gi, v, dp_axes),
+                )
+            vals, metas = [], []
+            for kind, path, ab in entries:
+                g = _get(grads, path)
+                if kind == "slice":
+                    g = g[ab[0] : ab[1]]
+                metas.append((kind, path, ab, g.dtype, g.shape))
+                vals.append(_encode(g, config))
+            if config.fuse == "concat":
+                flat = (
+                    jnp.concatenate([v.reshape(-1) for v in vals])
+                    if len(vals) > 1
+                    else vals[0].reshape(-1)
+                )
+                red = _marked_issue(name, gi, flat, dp_axes)
+                parts, off = [], 0
+                for _, _, _, _, shp in metas:
+                    n = int(np.prod(shp)) if shp else 1
+                    parts.append(red[off : off + n].reshape(shp))
+                    off += n
+            else:
+                parts = list(_marked_issue(name, gi, tuple(vals), dp_axes))
+            for (kind, path, ab, dt, _), r in zip(metas, parts):
+                r = r.astype(dt)
+                if config.average:
+                    r = (r.astype(jnp.float32) / world).astype(dt)
+                out = _write_back(out, kind, path, ab, r)
+        return out, residual
+
+    def sync(grads: Pytree, residual: Pytree | None = None):
+        if stateful and residual is None:
+            raise ValueError("compression='bf16_ef' needs the residual pytree")
         out = grads
         res_out = residual
         # Issue groups in backward order (layer-L group first), matching the
         # availability order the schedule was optimized for.  Each group is
         # wrapped in a named scope so device profiles (and the timeline
         # layer's per-group comm attribution) see the schedule boundaries.
-        for gi, entries in enumerate(group_entries):
-            lo, hi = group_spans[gi]
-            with jax.named_scope(f"wfbp_group{gi}_l{lo}_{hi}"):
-                if config.fuse == "arena":
-                    out, res_out = _arena_group(
-                        entries, grads, out, res_out, dp_axes, world, config
-                    )
-                    continue
-                vals, metas = [], []
-                for kind, path, ab in entries:
-                    g = _get(grads, path)
-                    if kind == "slice":
-                        g = g[ab[0] : ab[1]]
-                    metas.append((kind, path, ab, g.dtype, g.shape))
-                    vals.append(_encode(g, config))
-                if config.fuse == "concat":
-                    flat = (
-                        jnp.concatenate([v.reshape(-1) for v in vals])
-                        if len(vals) > 1
-                        else vals[0].reshape(-1)
-                    )
-                    red = issue(Collective.ALL_REDUCE, flat, dp_axes)
-                    parts, off = [], 0
-                    for _, _, _, _, shp in metas:
-                        n = int(np.prod(shp)) if shp else 1
-                        parts.append(red[off : off + n].reshape(shp))
-                        off += n
-                else:
-                    parts = list(issue(Collective.ALL_REDUCE, tuple(vals), dp_axes))
-                for (kind, path, ab, dt, _), r in zip(metas, parts):
-                    r = r.astype(dt)
-                    if config.average:
-                        r = (r.astype(jnp.float32) / world).astype(dt)
-                    out = _write_back(out, kind, path, ab, r)
+        for gi in range(len(group_entries)):
+            out, res_out = sync_group(gi, grads, out, res_out)
         return (out, res_out) if stateful else out
 
     # Metadata for the instrumentation layer (runtime/timeline.py): the
@@ -213,6 +253,8 @@ def make_gradient_sync(
     sync.group_spans = group_spans
     sync.group_wire_bytes = group_wire_bytes
     sync.stateful = stateful
+    sync.sync_group = sync_group
+    sync.n_groups = len(group_entries)
     return sync
 
 
@@ -224,6 +266,7 @@ def _arena_group(
     dp_axes: tuple[str, ...],
     world,
     config: SyncConfig,
+    issue_fn=None,
 ) -> tuple[Pytree, Pytree | None]:
     """One group over the arena wire path: pack(+cast[+EF]) -> one psum
     -> unpack(+decompress+average).  The arena layout is the plan-time
@@ -247,7 +290,9 @@ def _arena_group(
         parts, [m[5] for m in metas], off, config.wire_dtype,
         residuals=resid if residual is not None else None,
     )
-    red = issue(Collective.ALL_REDUCE, arena, dp_axes)
+    if issue_fn is None:
+        issue_fn = lambda v: issue(Collective.ALL_REDUCE, v, dp_axes)
+    red = issue_fn(arena)
     scale = (1.0 / world) if config.average else 1.0
     unpacked = unpack_arena(
         red,

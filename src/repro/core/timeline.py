@@ -14,6 +14,23 @@ the sum of member gradient sizes, becoming available when the gradient of
 backward order: the group containing layer ``L`` first, the group containing
 layer ``1`` last.  WFBP is the all-singleton partition; SyncEASGD is the
 single-group partition; MG-WFBP picks the optimum (paper Theorem 1).
+
+Two *issue-order modes* price the same partition against two executions:
+
+  ``overlap``     — the WFBP/MG-WFBP DAG execution (Shi et al.'s DAG model
+                    of S-SGD, arXiv 1805.03812): group g's merged message
+                    becomes available the moment its lowest layer's
+                    gradient lands, so its wire time hides behind the
+                    backward compute of groups g+1.. (the historical — and
+                    default — semantics of this module).
+  ``serialized``  — the post-backward execution: no message may start
+                    before the whole backward pass finishes (the behavior
+                    of a train step that synchronizes after
+                    ``value_and_grad`` returns).  Same channel law, same
+                    payloads — only the availability times move.
+
+For any partition, overlapped ``t_iter`` <= serialized ``t_iter`` (comm
+can only start earlier); the property suite pins this.
 """
 
 from __future__ import annotations
@@ -76,24 +93,50 @@ def gradient_avail_times(costs: list[LayerCost], hw: Hardware, t_f: float) -> li
     return [0.0] + [tau_b[l] + costs[l - 1].t_b(hw) for l in range(1, L + 1)]
 
 
+#: Issue-order modes the timeline can price (see module docstring).
+MODES = ("overlap", "serialized")
+
+
+def comm_avail_times(
+    costs: list[LayerCost], hw: Hardware, t_f: float, mode: str = "overlap"
+) -> list[float]:
+    """Per-layer communication availability under an issue-order mode.
+
+    ``overlap``: layer l's message may go the moment its gradient lands
+    (``gradient_avail_times``).  ``serialized``: every message waits for
+    the end of backward (``t_f + Σ t_b``) — the post-backward step.
+    1-based list of length L+1 (index 0 unused).
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown issue-order mode {mode!r}; known: {MODES}")
+    if mode == "overlap":
+        return gradient_avail_times(costs, hw, t_f)
+    end = t_f + sum(c.t_b(hw) for c in costs)
+    return [0.0] + [end] * len(costs)
+
+
 def evaluate(
     groups: list[tuple[int, int]],
     costs: list[LayerCost],
     ar_model: AllReduceModel,
     hw: Hardware = TPU_V5E,
     t_f: float | None = None,
+    mode: str = "overlap",
 ) -> TimelineResult:
     """Evaluate a contiguous-partition schedule against the WFBP timeline.
 
     ``groups`` are (lo, hi) 1-based inclusive ranges covering 1..L exactly,
-    in ascending order.  Returns the full per-group trace.
+    in ascending order.  Returns the full per-group trace.  ``mode``
+    selects the issue order the schedule executes under: ``overlap``
+    (default — comm of group g hides behind backward of groups g+1..) or
+    ``serialized`` (all comm waits for the end of backward).
     """
     L = len(costs)
     _check_partition(groups, L)
     if t_f is None:
         t_f = sum(c.t_f(hw) for c in costs)
     t_b_total = sum(c.t_b(hw) for c in costs)
-    avail = gradient_avail_times(costs, hw, t_f)
+    avail = comm_avail_times(costs, hw, t_f, mode)
 
     traces: list[GroupTrace] = []
     channel_free = 0.0

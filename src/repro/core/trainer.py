@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import shard_map
-from ..models import loss_fn
+from ..models import loss_fn, staged_loss_fns
 from ..models.common import ArchConfig
 from ..optim.optimizers import Optimizer
 from ..planning import AnalyticCosts, CostSource, build_plan, replan_if_drifted
@@ -42,7 +42,7 @@ from .bucketing import stacked_lm_layout
 from .comm_model import AllReduceModel
 from .cost_model import Hardware, LayerCost, TPU_V5E
 from .schedule import Schedule
-from .sync import SyncConfig, make_gradient_sync
+from .sync import SyncConfig, device_index, make_gradient_sync
 
 Pytree = Any
 
@@ -112,6 +112,53 @@ def build_schedule(
     return _registry_build_schedule(
         method, costs, ar_model, hw=hw, bucket_bytes=bucket_bytes
     )
+
+
+def group_issue_events(
+    schedule: Schedule,
+    n_stages: int,
+    segments: tuple[tuple[int, int], ...],
+    has_tail: bool,
+) -> dict[Any, tuple[int, ...]]:
+    """Map each backward event to the schedule groups it completes.
+
+    Events key the DAG step's backward walk: ``"head"``, ``"tail"``,
+    ``("seg", j)`` (the ``j``-th scan segment), ``"embed"`` — in that
+    execution order.  Group ``gi`` (backward issue order) appears under
+    the event that computes the gradient of its *lowest* unit ``lo``
+    (the last member gradient to land, paper Eq. 6): the embed event for
+    ``lo == 1``, the segment containing stage ``lo - 2`` for stage
+    units, the tail/head events otherwise.  Every group appears exactly
+    once — the partition covers all units.
+    """
+    group_spans = tuple(reversed(schedule.groups))
+    n_units = schedule.num_layers
+    tail_unit = n_stages + 2 if has_tail else None
+    out: dict[Any, list[int]] = {}
+    for gi, (lo, _hi) in enumerate(group_spans):
+        if lo == 1:
+            event: Any = "embed"
+        elif lo <= 1 + n_stages:
+            s = lo - 2
+            event = None
+            for j, (start, stop) in enumerate(segments):
+                if start <= s < stop:
+                    event = ("seg", j)
+                    break
+            if event is None:
+                raise ValueError(
+                    f"group {group_spans[gi]} starts at stage {s} but no scan "
+                    f"segment in {segments} contains it"
+                )
+        elif tail_unit is not None and lo == tail_unit:
+            event = "tail"
+        elif lo == n_units:
+            event = "head"
+        else:
+            raise ValueError(f"group {group_spans[gi]} has no issue event")
+        out.setdefault(event, []).append(gi)
+    assert sum(len(v) for v in out.values()) == len(group_spans)
+    return {k: tuple(v) for k, v in out.items()}
 
 
 @dataclasses.dataclass
@@ -265,7 +312,10 @@ class MGWFBPEngine:
             return self, False
         return self.with_plan(new_plan), True
 
-    def make_train_step(self, optimizer: Optimizer, mesh, *, lr: float = 3e-4):
+    def make_train_step(
+        self, optimizer: Optimizer, mesh, *, lr: float = 3e-4,
+        issue: str = "post", recorder=None,
+    ):
         """Shard-map train step: manual DP axes, auto model axis.
 
         Stateless sync: ``step(params, opt_state, batch) -> (params,
@@ -277,7 +327,31 @@ class MGWFBPEngine:
         is per-device state: its leaves carry a leading DP axis sharded
         over ``dp_axes`` (each device reads and writes only its own
         slice), never falsely claimed replicated.
+
+        ``issue`` selects the communication issue order
+        (``core.timeline.MODES`` maps onto it: ``'dag'`` executes what
+        ``mode='overlap'`` prices, ``'post'`` what ``'serialized'``
+        prices):
+
+        * ``'post'`` — the historical step: one ``value_and_grad`` over
+          the whole model, then every group's all-reduce;
+        * ``'dag'`` — the WFBP DAG step: the forward records one
+          ``jax.vjp`` pullback per unit event (embed / scan segment /
+          tail / head), backward walks them in reverse, and each
+          schedule group's merged all-reduce is issued *at the event
+          where its last gradient lands* — program order, not compiler
+          luck, puts the wire inside backward.  Group ``g``'s psum
+          depends only on gradients already computed when it issues, so
+          its wire time hides behind the backward of groups ``g+1..``.
+
+        ``recorder`` (a ``profiler.TraceRecorder``) plants data-dependent
+        span markers: ``bwd_*`` around each backward event and
+        ``wfbp_group*`` around each group's reduction — the spans
+        ``profiler.overlap_report`` turns into a measured overlap
+        fraction.
         """
+        if issue not in ("post", "dag"):
+            raise ValueError(f"unknown issue order {issue!r}; known: ('post', 'dag')")
         cfg = self.cfg
         P = jax.sharding.PartitionSpec
 
@@ -287,11 +361,32 @@ class MGWFBPEngine:
         else:
             batch_spec["tokens"] = P(self.dp_axes, None)
 
+        sync = self.sync
+        if recorder is not None:
+            # rebuild the sync closure with markers woven around each psum
+            sync = make_gradient_sync(
+                self.plan.layout, self.plan.schedule, self.dp_axes,
+                self.sync_config, recorder=recorder,
+            )
+
+        if issue == "dag":
+            return self._make_dag_step(
+                optimizer, mesh, lr=lr, sync=sync, recorder=recorder,
+                batch_spec=batch_spec,
+            )
+
         def grads_and_loss(params, batch):
             def loss(p):
                 return loss_fn(p, batch, cfg, segments=self.segments)
 
-            return jax.value_and_grad(loss, has_aux=True)(params)
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            if recorder is not None:
+                dev = device_index(self.dp_axes)
+                # one whole-backward span: opens once the loss exists,
+                # closes when the last (embed) gradient lands
+                recorder.span_begin("bwd_backward", l, device=dev)
+                recorder.span_end("bwd_backward", grads["embed"], device=dev)
+            return (l, metrics), grads
 
         if self.stateful:
             # residual leaves carry a leading DP axis; inside the manual
@@ -301,7 +396,7 @@ class MGWFBPEngine:
             def body_ef(params, opt_state, residual, batch):
                 (l, metrics), grads = grads_and_loss(params, batch)
                 local_res = jax.tree.map(lambda r: r[0], residual)
-                grads, new_res = self.sync(grads, local_res)
+                grads, new_res = sync(grads, local_res)
                 new_residual = jax.tree.map(lambda r: r[None], new_res)
                 new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
                 l = jax.lax.pmean(l, self.dp_axes)
@@ -319,7 +414,138 @@ class MGWFBPEngine:
 
         def body(params, opt_state, batch):
             (l, metrics), grads = grads_and_loss(params, batch)
-            grads = self.sync(grads)
+            grads = sync(grads)
+            new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+            l = jax.lax.pmean(l, self.dp_axes)
+            return new_params, new_opt, {"loss": l}
+
+        smapped = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), batch_spec),
+            out_specs=(P(), P(), P()),
+            axis_names=set(self.dp_axes),
+            check_vma=False,
+        )
+        return jax.jit(smapped, donate_argnums=(0, 1))
+
+    def _make_dag_step(self, optimizer, mesh, *, lr, sync, recorder, batch_spec):
+        """The DAG-scheduled step body (see ``make_train_step``)."""
+        cfg = self.cfg
+        segments = self.segments
+        if segments is None:
+            raise ValueError("issue='dag' needs a plan with scan segments")
+        events = group_issue_events(
+            self.schedule, cfg.n_stages, segments, has_tail=bool(cfg.tail_pattern)
+        )
+        P = jax.sharding.PartitionSpec
+
+        def dag_grads(params, batch, residual):
+            """Staged fwd -> backward walk with in-backward group issue.
+
+            Returns ``(reduced_grads, residual, loss, metrics)``."""
+            embed_fn, seg_fns, tail_fn, head_fn = staged_loss_fns(cfg, batch, segments)
+            dev = device_index(self.dp_axes) if recorder is not None else 0
+
+            def mark_b(name, dep):
+                if recorder is not None:
+                    recorder.span_begin(name, dep, device=dev)
+
+            def mark_e(name, dep):
+                if recorder is not None:
+                    recorder.span_end(name, dep, device=dev)
+
+            # ---- forward: one vjp pullback per unit event --------------
+            x, pb_embed = jax.vjp(embed_fn, params["embed"])
+            seg_pbs, aux_parts = [], []
+            for (start, stop), seg_fn in zip(segments, seg_fns):
+                seg_p = jax.tree.map(lambda a: a[start:stop], params["stages"])
+                (x, aux), pb = jax.vjp(seg_fn, seg_p, x)
+                seg_pbs.append(pb)
+                aux_parts.append(aux)
+            pb_tail = None
+            if tail_fn is not None:
+                (x, aux), pb_tail = jax.vjp(tail_fn, params["tail"], x)
+                aux_parts.append(aux)
+            aux_total = sum(aux_parts)
+            head_p = {"final_norm": params["final_norm"]}
+            if not cfg.tie_embeddings:
+                head_p["head"] = params["head"]
+            l, pb_head, metrics = jax.vjp(
+                head_fn, head_p, params["embed"], x, aux_total, has_aux=True
+            )
+
+            # ---- backward: walk pullbacks in reverse, issuing each
+            # group's all-reduce the moment its last gradient lands.
+            # ``acc`` collects raw per-event gradients (group psums read
+            # only already-computed paths — the issue point is program
+            # order, not a compiler artifact); ``out`` collects the
+            # reduced write-backs (every path is covered by exactly one
+            # group, so starting from zeros is fully overwritten).
+            acc = dict(jax.tree.map(jnp.zeros_like, params))
+            out = jax.tree.map(jnp.zeros_like, params)
+            res = residual
+
+            def issue_ready(event, out, res):
+                for gi in events.get(event, ()):
+                    out, res = sync.sync_group(gi, acc, out, res)
+                return out, res
+
+            mark_b("bwd_head", l)
+            d_head_p, d_embed_head, dx, daux = pb_head(jnp.ones_like(l))
+            mark_e("bwd_head", (d_head_p, dx))
+            acc["final_norm"] = d_head_p["final_norm"]
+            if not cfg.tie_embeddings:
+                acc["head"] = d_head_p["head"]
+            out, res = issue_ready("head", out, res)
+
+            if pb_tail is not None:
+                mark_b("bwd_tail", dx)
+                d_tail_p, dx = pb_tail((dx, daux))
+                mark_e("bwd_tail", (d_tail_p, dx))
+                acc["tail"] = d_tail_p
+                out, res = issue_ready("tail", out, res)
+
+            for j in range(len(segments) - 1, -1, -1):
+                start, stop = segments[j]
+                mark_b(f"bwd_seg{j}", dx)
+                d_seg_p, dx = seg_pbs[j]((dx, daux))
+                mark_e(f"bwd_seg{j}", (d_seg_p, dx))
+                acc["stages"] = jax.tree.map(
+                    lambda g, d: g.at[start:stop].set(d), acc["stages"], d_seg_p
+                )
+                out, res = issue_ready(("seg", j), out, res)
+
+            mark_b("bwd_embed", dx)
+            (d_embed_lookup,) = pb_embed(dx)
+            mark_e("bwd_embed", d_embed_lookup)
+            acc["embed"] = d_embed_head + d_embed_lookup
+            out, res = issue_ready("embed", out, res)
+            return out, res, l, metrics
+
+        if self.stateful:
+            res_spec = P(self.dp_axes)
+
+            def body_ef(params, opt_state, residual, batch):
+                local_res = jax.tree.map(lambda r: r[0], residual)
+                grads, new_res, l, metrics = dag_grads(params, batch, local_res)
+                new_residual = jax.tree.map(lambda r: r[None], new_res)
+                new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+                l = jax.lax.pmean(l, self.dp_axes)
+                return new_params, new_opt, new_residual, {"loss": l}
+
+            smapped = shard_map(
+                body_ef,
+                mesh=mesh,
+                in_specs=(P(), P(), res_spec, batch_spec),
+                out_specs=(P(), P(), res_spec, P()),
+                axis_names=set(self.dp_axes),
+                check_vma=False,
+            )
+            return jax.jit(smapped, donate_argnums=(0, 1, 2))
+
+        def body(params, opt_state, batch):
+            grads, _, l, metrics = dag_grads(params, batch, None)
             new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
             l = jax.lax.pmean(l, self.dp_axes)
             return new_params, new_opt, {"loss": l}

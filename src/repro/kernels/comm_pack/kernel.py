@@ -17,11 +17,16 @@ wire buffer is byte-identical in size to the concat layout) — TPU DMAs
 take arbitrary element offsets, trading a little engine efficiency on
 odd tails for never shipping padding over the wire.
 
-The chunk loop is unrolled at trace time (sizes are static) and single-
-buffered for clarity; double-buffering the staging copies is a local
-change (see the DMA-pipeline pattern in flash_attention) left until a
-profile shows these group-sized copies anywhere near the critical path —
-the arena pack replaces copies XLA was *already* making.
+The chunk loop is unrolled at trace time (sizes are static) and the
+staging copies are double-buffered (the DMA-pipeline pattern from
+flash_attention): every VMEM staging buffer has two slots and a
+two-entry DMA semaphore array, the first inbound copy is warmed up
+before the loop, and at chunk ``k`` the kernel starts the inbound copy
+for chunk ``k+1`` into slot ``(k+1) % 2`` before waiting on chunk
+``k``'s — so the next HBM read is in flight while the current chunk is
+cast (and the previous chunk's arena write drains).  Slot reuse is
+fenced by waiting chunk ``k-1``'s *outbound* copy before starting chunk
+``k+1``'s inbound one, which shares its slot.
 """
 
 from __future__ import annotations
@@ -41,12 +46,6 @@ DEFAULT_CHUNK = 1 << 16
 _ANY = pl.BlockSpec(memory_space=pltpu.ANY)
 
 
-def _copy(src_ref, dst_ref, sem) -> None:
-    cp = pltpu.make_async_copy(src_ref, dst_ref, sem)
-    cp.start()
-    cp.wait()
-
-
 def _pack_kernel(
     *refs,
     sizes: tuple[int, ...],
@@ -63,29 +62,97 @@ def _pack_kernel(
 
     for i in range(n):
         ck = min(chunk, sizes[i])
+        c0s = tuple(range(0, sizes[i], ck))
 
-        def part(src, wire, sem, res=None, i=i, ck=ck):
-            for c0 in range(0, sizes[i], ck):
+        def part(
+            src,
+            wire,
+            in_sem,
+            out_sem,
+            res=None,
+            res_in_sem=None,
+            res_out_sem=None,
+            i=i,
+            ck=ck,
+            c0s=c0s,
+        ):
+            def in_dmas(k):
+                c0 = c0s[k]
                 m = min(ck, sizes[i] - c0)
-                _copy(parts[i].at[pl.ds(c0, m)], src.at[pl.ds(0, m)], sem)
-                x = src[pl.ds(0, m)].astype(jnp.float32)
+                s = k % 2
+                cps = [
+                    pltpu.make_async_copy(
+                        parts[i].at[pl.ds(c0, m)], src.at[s, pl.ds(0, m)], in_sem.at[s]
+                    )
+                ]
                 if ef:
-                    _copy(resid[i].at[pl.ds(c0, m)], res.at[pl.ds(0, m)], sem)
-                    x = x + res[pl.ds(0, m)]
+                    cps.append(
+                        pltpu.make_async_copy(
+                            resid[i].at[pl.ds(c0, m)],
+                            res.at[s, pl.ds(0, m)],
+                            res_in_sem.at[s],
+                        )
+                    )
+                return cps
+
+            def out_dmas(k):
+                c0 = c0s[k]
+                m = min(ck, sizes[i] - c0)
+                s = k % 2
+                cps = [
+                    pltpu.make_async_copy(
+                        wire.at[s, pl.ds(0, m)],
+                        arena.at[pl.ds(offsets[i] + c0, m)],
+                        out_sem.at[s],
+                    )
+                ]
+                if ef:
+                    cps.append(
+                        pltpu.make_async_copy(
+                            res.at[s, pl.ds(0, m)],
+                            new_res[i].at[pl.ds(c0, m)],
+                            res_out_sem.at[s],
+                        )
+                    )
+                return cps
+
+            for cp in in_dmas(0):  # warm-up: first chunk's inbound copies
+                cp.start()
+            for k in range(len(c0s)):
+                m = min(ck, sizes[i] - c0s[k])
+                s = k % 2
+                if k >= 1:
+                    # Drain chunk k-1's outbound copies: they share slot
+                    # (k+1) % 2 with chunk k+1's inbound ones.
+                    for cp in out_dmas(k - 1):
+                        cp.wait()
+                if k + 1 < len(c0s):
+                    for cp in in_dmas(k + 1):
+                        cp.start()
+                for cp in in_dmas(k):
+                    cp.wait()
+                x = src[s, pl.ds(0, m)].astype(jnp.float32)
+                if ef:
+                    x = x + res[s, pl.ds(0, m)]
                 w = x.astype(comm_dtype)
-                wire[pl.ds(0, m)] = w
-                _copy(wire.at[pl.ds(0, m)], arena.at[pl.ds(offsets[i] + c0, m)], sem)
+                wire[s, pl.ds(0, m)] = w
                 if ef:
-                    res[pl.ds(0, m)] = x - w.astype(jnp.float32)
-                    _copy(res.at[pl.ds(0, m)], new_res[i].at[pl.ds(c0, m)], sem)
+                    res[s, pl.ds(0, m)] = x - w.astype(jnp.float32)
+                for cp in out_dmas(k):
+                    cp.start()
+            for cp in out_dmas(len(c0s) - 1):
+                cp.wait()
 
         scratch = dict(
-            src=pltpu.VMEM((ck,), parts[i].dtype),
-            wire=pltpu.VMEM((ck,), comm_dtype),
-            sem=pltpu.SemaphoreType.DMA(()),
+            src=pltpu.VMEM((2, ck), parts[i].dtype),
+            wire=pltpu.VMEM((2, ck), comm_dtype),
+            in_sem=pltpu.SemaphoreType.DMA((2,)),
+            out_sem=pltpu.SemaphoreType.DMA((2,)),
         )
         if ef:
-            scratch["res"] = pltpu.VMEM((ck,), jnp.float32)
+            scratch["res"] = pltpu.VMEM((2, ck), jnp.float32)
+            scratch["res_in_sem"] = pltpu.SemaphoreType.DMA((2,))
+            scratch["res_out_sem"] = pltpu.SemaphoreType.DMA((2,))
         pl.run_scoped(part, **scratch)
 
 
@@ -134,20 +201,45 @@ def _unpack_kernel(
 ):
     for i, (off, sz) in enumerate(slots):
         ck = min(chunk, sz)
+        c0s = tuple(range(0, sz, ck))
 
-        def part(wire, dst, sem, i=i, off=off, sz=sz, ck=ck):
-            for c0 in range(0, sz, ck):
+        def part(wire, dst, in_sem, out_sem, i=i, off=off, sz=sz, ck=ck, c0s=c0s):
+            def in_dma(k):
+                c0 = c0s[k]
                 m = min(ck, sz - c0)
-                _copy(arena.at[pl.ds(off + c0, m)], wire.at[pl.ds(0, m)], sem)
-                x = wire[pl.ds(0, m)].astype(jnp.float32) * scale_ref[0]
-                dst[pl.ds(0, m)] = x.astype(dtypes[i])
-                _copy(dst.at[pl.ds(0, m)], outs[i].at[pl.ds(c0, m)], sem)
+                s = k % 2
+                return pltpu.make_async_copy(
+                    arena.at[pl.ds(off + c0, m)], wire.at[s, pl.ds(0, m)], in_sem.at[s]
+                )
+
+            def out_dma(k):
+                c0 = c0s[k]
+                m = min(ck, sz - c0)
+                s = k % 2
+                return pltpu.make_async_copy(
+                    dst.at[s, pl.ds(0, m)], outs[i].at[pl.ds(c0, m)], out_sem.at[s]
+                )
+
+            in_dma(0).start()  # warm-up
+            for k in range(len(c0s)):
+                m = min(ck, sz - c0s[k])
+                s = k % 2
+                if k >= 1:
+                    out_dma(k - 1).wait()  # frees the slot chunk k+1 stages into
+                if k + 1 < len(c0s):
+                    in_dma(k + 1).start()
+                in_dma(k).wait()
+                x = wire[s, pl.ds(0, m)].astype(jnp.float32) * scale_ref[0]
+                dst[s, pl.ds(0, m)] = x.astype(dtypes[i])
+                out_dma(k).start()
+            out_dma(len(c0s) - 1).wait()
 
         pl.run_scoped(
             part,
-            wire=pltpu.VMEM((ck,), arena.dtype),
-            dst=pltpu.VMEM((ck,), dtypes[i]),
-            sem=pltpu.SemaphoreType.DMA(()),
+            wire=pltpu.VMEM((2, ck), arena.dtype),
+            dst=pltpu.VMEM((2, ck), dtypes[i]),
+            in_sem=pltpu.SemaphoreType.DMA((2,)),
+            out_sem=pltpu.SemaphoreType.DMA((2,)),
         )
 
 

@@ -32,18 +32,22 @@ def pack_arena(
     *,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    chunk: int | None = None,
 ) -> tuple[jax.Array, list[jax.Array] | None]:
     """Pack one group's parts into its flat wire arena.
 
     Fuses the wire-dtype cast, and — when ``residuals`` (f32, same
     structure) is given — the error-feedback accumulate/update.  Returns
     ``(arena, new_residuals)``; residuals keep the parts' shapes.
+    ``chunk`` overrides the staging-buffer length (elements) on the
+    Pallas path — tests shrink it to force the multi-chunk DMA pipeline.
     """
     flat = [p.reshape(-1) for p in parts]
     res_flat = None if residuals is None else [r.reshape(-1) for r in residuals]
     if _use_pallas(use_pallas) or interpret:
+        kw = {} if chunk is None else {"chunk": chunk}
         arena, new_res = pack_arena_pallas(
-            flat, offsets, size, comm_dtype, res_flat, interpret=interpret
+            flat, offsets, size, comm_dtype, res_flat, interpret=interpret, **kw
         )
     else:
         arena, new_res = pack_arena_ref(flat, offsets, size, comm_dtype, res_flat)
@@ -61,13 +65,15 @@ def unpack_arena(
     *,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    chunk: int | None = None,
 ) -> list[jax.Array]:
     """Slice the reduced arena back into parts (decompress + DP-average
     fused); parts come back in their original shapes/dtypes."""
     if _use_pallas(use_pallas) or interpret:
+        kw = {} if chunk is None else {"chunk": chunk}
         out = unpack_arena_pallas(
             arena, slots, dtypes, jnp.asarray(scale, jnp.float32).reshape(1),
-            interpret=interpret,
+            interpret=interpret, **kw,
         )
     else:
         out = unpack_arena_ref(arena, slots, dtypes, scale)

@@ -9,6 +9,7 @@ from .transformer import (
     init_caches,
     init_params,
     loss_fn,
+    staged_loss_fns,
 )
 
 __all__ = [
@@ -22,4 +23,5 @@ __all__ = [
     "init_caches",
     "init_params",
     "loss_fn",
+    "staged_loss_fns",
 ]

@@ -314,15 +314,28 @@ CHUNKED_CE_VOCAB = 64000  # big-vocab archs never materialize full logits
 CE_SEQ_CHUNK = 512
 
 
-def loss_fn(
-    params: Pytree,
-    batch: dict,
+def _ce_from_hidden(
     cfg: ArchConfig,
-    segments: tuple[tuple[int, int], ...] | None = None,
-    act_sharding_constraint=None,
+    head: jax.Array,
+    x: jax.Array,
+    targets: jax.Array,
+    mask: jax.Array | None = None,
     logits_sharding_constraint=None,
-) -> tuple[jax.Array, dict]:
-    targets = batch["targets"]
+) -> jax.Array:
+    """Cross-entropy from post-final-norm hidden states.
+
+    The one CE implementation both the monolithic ``loss_fn`` and the
+    DAG step's staged head closure run — shared so the two steps compute
+    the same floats.  ``head`` is the (d, vocab) projection (already
+    transposed when embeddings are tied).
+
+    Chunked path: the (B, S, V) fp32 logits of a 100k–256k vocab
+    dominate training memory when the model axis is consumed by the
+    batch; computing the loss per sequence chunk under remat bounds the
+    transient to (B, CE_SEQ_CHUNK, V) and recomputes it in backward.
+    (``mask`` is a standard-path feature; the chunked archs train
+    unmasked.)
+    """
     seq = targets.shape[1]
     use_chunked = (
         cfg.vocab >= CHUNKED_CE_VOCAB
@@ -330,24 +343,6 @@ def loss_fn(
         and seq % CE_SEQ_CHUNK == 0
     )
     if use_chunked:
-        # sequence-chunked CE: the (B, S, V) fp32 logits of a 100k–256k
-        # vocab dominate training memory when the model axis is consumed
-        # by the batch (no vocab sharding available); computing the loss
-        # per sequence chunk under remat bounds the transient to
-        # (B, CE_SEQ_CHUNK, V) and recomputes it in backward.
-        x, _, aux = forward(
-            params, cfg,
-            tokens=batch.get("tokens"),
-            embeds=batch.get("embeds"),
-            segments=segments,
-            act_sharding_constraint=act_sharding_constraint,
-            return_hidden=True,
-        )
-        head = (
-            params["embed"].T.astype(cfg.param_dtype)
-            if cfg.tie_embeddings
-            else params["head"]
-        )
 
         @jax.remat
         def ce_chunk(x_c, t_c):
@@ -370,28 +365,142 @@ def loss_fn(
             total_nll = sum(body(i) for i in range(n_chunks))
         else:
             total_nll = jnp.sum(jax.lax.map(body, jnp.arange(n_chunks)))
-        ce = total_nll / (targets.shape[0] * seq)
-        total = ce + MOE_AUX_COEF * aux
-        return total, {"ce": ce, "moe_aux": aux}
+        return total_nll / (targets.shape[0] * seq)
 
-    logits, _, aux = forward(
+    logits = (x @ head).astype(jnp.float32)
+    logits = softcap_logits(logits, cfg.logit_softcap)
+    if logits_sharding_constraint is not None:
+        logits = logits_sharding_constraint(logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(lse - ll)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(
+    params: Pytree,
+    batch: dict,
+    cfg: ArchConfig,
+    segments: tuple[tuple[int, int], ...] | None = None,
+    act_sharding_constraint=None,
+    logits_sharding_constraint=None,
+) -> tuple[jax.Array, dict]:
+    x, _, aux = forward(
         params, cfg,
         tokens=batch.get("tokens"),
         embeds=batch.get("embeds"),
         segments=segments,
         act_sharding_constraint=act_sharding_constraint,
+        return_hidden=True,
     )
-    if logits_sharding_constraint is not None:
-        logits = logits_sharding_constraint(logits)
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
-    mask = batch.get("mask")
-    if mask is None:
-        ce = jnp.mean(lse - ll)
-    else:
-        ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    head = (
+        params["embed"].T.astype(cfg.param_dtype)
+        if cfg.tie_embeddings
+        else params["head"]
+    )
+    ce = _ce_from_hidden(
+        cfg, head, x, batch["targets"], mask=batch.get("mask"),
+        logits_sharding_constraint=logits_sharding_constraint,
+    )
     total = ce + MOE_AUX_COEF * aux
     return total, {"ce": ce, "moe_aux": aux}
+
+
+def staged_loss_fns(
+    cfg: ArchConfig,
+    batch: dict,
+    segments: tuple[tuple[int, int], ...],
+    act_sharding_constraint=None,
+    logits_sharding_constraint=None,
+):
+    """Split the training loss into per-unit closures for the DAG step.
+
+    Returns ``(embed_fn, seg_fns, tail_fn, head_fn)``:
+
+    * ``embed_fn(embed_p) -> x`` — token lookup (+ gemma scaling +
+      sinusoidal PE), or the input cast in ``embeds`` mode;
+    * ``seg_fns[j](seg_params, x) -> (x, aux)`` — one scan over the
+      stages of ``segments[j]`` (caller slices the stacked params);
+    * ``tail_fn(tail_p, x) -> (x, aux)`` or ``None``;
+    * ``head_fn(head_p, embed_p, x, aux) -> (loss, metrics)`` —
+      final-norm + projection + CE (``head_p`` holds ``final_norm`` and,
+      untied, ``head``; tied embeddings read ``embed_p`` so its vjp
+      carries the tied d_embed contribution).
+
+    Chained with ``jax.vjp`` these compute the same loss as ``loss_fn``
+    over the same ``segments`` (shared ``apply_stage`` bodies, shared
+    ``_ce_from_hidden``); the split exists so the train step can walk
+    the pullbacks in backward order and issue each schedule group's
+    all-reduce at the event where its last gradient lands.
+    """
+    targets = batch["targets"]
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    B, S = (tokens.shape if embeds is None else embeds.shape[:2])
+
+    base = jnp.arange(S)[None, :]
+    if cfg.attention and cfg.attention.rope == "mrope":
+        positions = jnp.broadcast_to(base, (3, B, S))
+    else:
+        positions = jnp.broadcast_to(base, (B, S))
+    constrain = act_sharding_constraint or (lambda a: a)
+
+    def embed_fn(embed_p):
+        if embeds is None:
+            x = embed_p[tokens].astype(cfg.param_dtype)
+            if cfg.tie_embeddings:
+                x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.param_dtype)
+        else:
+            x = embeds.astype(cfg.param_dtype)
+        if cfg.attention and cfg.attention.rope == "sinusoidal":
+            pe = sinusoidal_embedding(S, cfg.d_model, offset=0).astype(x.dtype)
+            x = x + pe[None]
+        return x
+
+    def _stage_apply(pattern):
+        def apply(p, v):
+            y, _, aux = apply_stage(p, v, cfg, pattern, positions=positions)
+            return y, aux
+
+        return _remat_wrap(cfg, apply)
+
+    def make_seg_fn():
+        stage_fn = _stage_apply(cfg.pattern)
+
+        def seg_fn(seg_params, x):
+            def body(xx, sp):
+                return stage_fn(sp, constrain(xx))
+
+            x, auxs = jax.lax.scan(body, x, seg_params)
+            return x, jnp.sum(auxs)
+
+        return seg_fn
+
+    seg_fns = tuple(make_seg_fn() for _ in segments)
+
+    tail_fn = None
+    if cfg.tail_pattern:
+        tail_stage_fn = _stage_apply(cfg.tail_pattern)
+
+        def tail_fn(tail_p, x):
+            return tail_stage_fn(tail_p, constrain(x))
+
+    def head_fn(head_p, embed_p, x, aux):
+        x = apply_norm(cfg, head_p["final_norm"], x)
+        head = (
+            embed_p.T.astype(cfg.param_dtype)
+            if cfg.tie_embeddings
+            else head_p["head"]
+        )
+        ce = _ce_from_hidden(
+            cfg, head, x, targets, mask=batch.get("mask"),
+            logits_sharding_constraint=logits_sharding_constraint,
+        )
+        total = ce + MOE_AUX_COEF * aux
+        return total, {"ce": ce, "moe_aux": aux}
+
+    return embed_fn, seg_fns, tail_fn, head_fn
 
 
 # ---------------------------------------------------------------------------

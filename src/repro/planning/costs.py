@@ -193,7 +193,10 @@ def min_of_k(
     return best
 
 
-def time_collective_call(f, x, repeats: int = 3, warmup: int = 1) -> float:
+def time_collective_call(
+    f, x, repeats: int = 3, warmup: int = 1,
+    clock: Callable[[], float] = time.perf_counter,
+) -> float:
     """Run ``warmup`` discarded calls (the first compiles — compile time
     must NEVER reach a timed sample, it would poison every (α, β) fit
     min-of-N merely hides) and return the min of ``repeats`` timed calls
@@ -202,16 +205,17 @@ def time_collective_call(f, x, repeats: int = 3, warmup: int = 1) -> float:
     gathers/all-to-alls), so compute- and comm-side measured costs stay
     directly comparable.  Samples run through ``min_of_k``: a probe 10×
     slower than the running min is re-taken, so one scheduler hiccup
-    cannot poison a 3-sample calibration."""
+    cannot poison a 3-sample calibration.  ``clock`` is injectable (the
+    FakeClock pattern) so tests never assert on real wall-clock deltas."""
     import jax
 
     for _ in range(max(1, warmup)):  # at least one: compile + warm
         jax.block_until_ready(f(x))
 
     def sample() -> float:
-        t0 = time.perf_counter()
+        t0 = clock()
         jax.block_until_ready(f(x))
-        return time.perf_counter() - t0
+        return clock() - t0
 
     return min_of_k(sample, repeats)
 

@@ -107,10 +107,17 @@ def build_schedule(
     t_f: float | None = None,
     **opts,
 ) -> Schedule:
-    """Run a registered policy and guarantee an evaluated result."""
+    """Run a registered policy and guarantee an evaluated result.
+
+    ``opts`` are forwarded to the policy; every built-in accepts
+    ``mode='overlap'|'serialized'`` (``core.timeline.MODES``) selecting the
+    issue-order model the schedule is optimized and priced under.
+    """
     schedule = get_policy(policy)(costs, ar_model, hw=hw, t_f=t_f, **opts)
     if schedule.result is None:
-        schedule = evaluate_schedule(schedule, costs, ar_model, hw, t_f)
+        schedule = evaluate_schedule(
+            schedule, costs, ar_model, hw, t_f, mode=opts.get("mode", "overlap")
+        )
     return schedule
 
 
@@ -120,38 +127,40 @@ def build_schedule(
 
 
 @register_policy("wfbp", aliases=())
-def _wfbp(costs, ar_model, hw=TPU_V5E, t_f=None, **opts) -> Schedule:
+def _wfbp(costs, ar_model, hw=TPU_V5E, t_f=None, *, mode: str = "overlap", **opts) -> Schedule:
     """WFBP [10,12]: one all-reduce per layer (𝕄 = ∅)."""
-    return evaluate_schedule(wfbp_schedule(len(costs)), costs, ar_model, hw, t_f)
+    return evaluate_schedule(wfbp_schedule(len(costs)), costs, ar_model, hw, t_f, mode=mode)
 
 
 @register_policy("synceasgd")
-def _synceasgd(costs, ar_model, hw=TPU_V5E, t_f=None, **opts) -> Schedule:
+def _synceasgd(costs, ar_model, hw=TPU_V5E, t_f=None, *, mode: str = "overlap", **opts) -> Schedule:
     """SyncEASGD [15]: single merged message after backward."""
-    return evaluate_schedule(synceasgd_schedule(len(costs)), costs, ar_model, hw, t_f)
+    return evaluate_schedule(
+        synceasgd_schedule(len(costs)), costs, ar_model, hw, t_f, mode=mode
+    )
 
 
 @register_policy("fixed")
-def _fixed(costs, ar_model, hw=TPU_V5E, t_f=None, *, bucket_bytes: int = 25 * 2**20, **opts) -> Schedule:
+def _fixed(costs, ar_model, hw=TPU_V5E, t_f=None, *, bucket_bytes: int = 25 * 2**20, mode: str = "overlap", **opts) -> Schedule:
     """DDP/Horovod-style size-threshold tensor fusion."""
     return evaluate_schedule(
-        fixed_bucket_schedule(costs, bucket_bytes), costs, ar_model, hw, t_f
+        fixed_bucket_schedule(costs, bucket_bytes), costs, ar_model, hw, t_f, mode=mode
     )
 
 
 @register_policy("mg_wfbp")
-def _mg_wfbp(costs, ar_model, hw=TPU_V5E, t_f=None, **opts) -> Schedule:
+def _mg_wfbp(costs, ar_model, hw=TPU_V5E, t_f=None, *, mode: str = "overlap", **opts) -> Schedule:
     """Paper Algorithm 1 greedy merge (O(L²), run once)."""
-    return mg_wfbp_schedule(costs, ar_model, hw, t_f)
+    return mg_wfbp_schedule(costs, ar_model, hw, t_f, mode=mode)
 
 
 @register_policy("dp_optimal")
-def _dp_optimal(costs, ar_model, hw=TPU_V5E, t_f=None, **opts) -> Schedule:
+def _dp_optimal(costs, ar_model, hw=TPU_V5E, t_f=None, *, mode: str = "overlap", **opts) -> Schedule:
     """Beyond-paper exact optimum via the O(L²) Bellman recursion."""
-    return dp_optimal_schedule(costs, ar_model, hw, t_f)
+    return dp_optimal_schedule(costs, ar_model, hw, t_f, mode=mode)
 
 
 @register_policy("optimal")
-def _optimal(costs, ar_model, hw=TPU_V5E, t_f=None, *, max_layers: int = 22, **opts) -> Schedule:
+def _optimal(costs, ar_model, hw=TPU_V5E, t_f=None, *, max_layers: int = 22, mode: str = "overlap", **opts) -> Schedule:
     """Exhaustive 2^(L-1) enumeration — small L only (tests, validation)."""
-    return optimal_schedule(costs, ar_model, hw, t_f, max_layers=max_layers)
+    return optimal_schedule(costs, ar_model, hw, t_f, max_layers=max_layers, mode=mode)

@@ -148,6 +148,7 @@ class Tuner:
         cost_source: str = "analytic",
         comm_source: str = "analytic",
         trigger: str = "sweep",
+        mode: str = "overlap",
     ) -> Plan:
         """Run every policy, return the argmin predicted-``t_iter`` Plan.
 
@@ -156,9 +157,18 @@ class Tuner:
         policy name).  The chosen plan's provenance records the trigger,
         the predicted t_iter, and how many candidates it beat; the full
         per-candidate table lands in ``self.history``.
+
+        ``mode`` prices every candidate under an issue-order model
+        (``core.timeline.MODES``): ``overlap`` (DAG step, comm hides
+        behind backward — the default) or ``serialized`` (post-backward
+        step).  Non-default modes ride each candidate's ``policy_opts``
+        so the plan artifact records what it was optimized for.
         """
         candidates: list[tuple[tuple, Candidate, Plan]] = []
         for policy in self.policies:
+            opts = dict(self.policy_opts.get(policy) or {})
+            if mode != "overlap":
+                opts["mode"] = mode
             plan = build_plan(
                 self.layout,
                 list(costs),
@@ -167,7 +177,7 @@ class Tuner:
                 hw=hw,
                 n_scan_stages=self.n_scan_stages,
                 cost_source=cost_source,
-                policy_opts=self.policy_opts.get(policy),
+                policy_opts=opts or None,
                 provenance=dict(self.provenance),
             )
             r = plan.schedule.result

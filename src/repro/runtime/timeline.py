@@ -198,12 +198,33 @@ class StepTimer:
     The train loop calls ``skip(n)`` after anything that recompiles (a
     re-plan, a restart) and ``observe(dt)`` per step; ``median()`` is the
     observed t_iter that predicted-vs-observed provenance compares
-    against (``Tuner.observe``)."""
+    against (``Tuner.observe``).
 
-    def __init__(self, window: int = 50, skip_first: int = 2):
+    ``clock`` is injectable (the FakeClock pattern the resilience tests
+    use) and drives the ``start()``/``stop()`` convenience pair, so
+    timing tests never sleep or race real wall clocks."""
+
+    def __init__(self, window: int = 50, skip_first: int = 2, clock: Callable[[], float] | None = None):
+        import time as _time
+
         self.window = window
+        self.clock = clock or _time.monotonic
         self._samples: list[float] = []
         self._skip = max(0, skip_first)
+        self._t0: float | None = None
+
+    def start(self) -> None:
+        """Arm the injected clock for one step (pair with ``stop``)."""
+        self._t0 = self.clock()
+
+    def stop(self) -> float:
+        """Observe and return the step seconds since ``start()``."""
+        if self._t0 is None:
+            raise ValueError("StepTimer.stop() before start()")
+        dt = self.clock() - self._t0
+        self._t0 = None
+        self.observe(dt)
+        return dt
 
     def skip(self, n: int = 2) -> None:
         """Discard the next ``n`` samples (recompile ahead)."""

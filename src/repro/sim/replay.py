@@ -31,7 +31,7 @@ import dataclasses
 from typing import Any, Sequence
 
 from ..core.cost_model import Hardware, LayerCost, TPU_V5E
-from ..core.timeline import GroupTrace, gradient_avail_times
+from ..core.timeline import GroupTrace, comm_avail_times
 from ..planning.registry import build_schedule
 from .cluster import ClusterSpec
 from .events import EventQueue
@@ -78,6 +78,7 @@ def simulate_train_iteration(
     hw: Hardware = TPU_V5E,
     t_f: float | None = None,
     multipliers: Sequence[float] = (1.0,),
+    mode: str = "overlap",
 ) -> SimIteration:
     """Replay one iteration of a merged-group schedule event by event.
 
@@ -86,7 +87,11 @@ def simulate_train_iteration(
     gradient lands; the merged all-reduce of a group starts at
     ``max(all hosts ready, channel free)`` in backward order on the one
     serialized channel.  ``multipliers=(1.0,) * n`` reproduces
-    ``core.timeline.evaluate`` exactly — same floats, same trace."""
+    ``core.timeline.evaluate`` exactly — same floats, same trace.
+
+    ``mode`` selects the issue-order model (``core.timeline.MODES``):
+    under ``serialized`` each host's ready events fire only at the end of
+    its (scaled) backward pass, replaying the post-backward step."""
     if not multipliers:
         raise ValueError("need at least one host multiplier")
     if any(m < 1.0 for m in multipliers):
@@ -94,7 +99,7 @@ def simulate_train_iteration(
     if t_f is None:
         t_f = sum(c.t_f(hw) for c in costs)
     t_b_total = sum(c.t_b(hw) for c in costs)
-    avail = gradient_avail_times(costs, hw, t_f)
+    avail = comm_avail_times(costs, hw, t_f, mode)
 
     order = list(reversed(list(groups)))  # backward (descending) issue order
     nbytes = [
@@ -185,7 +190,10 @@ def replay_train(
     all-reduce is re-priced at the new two-tier geometry and the policy
     re-plans — the simulated form of the elastic replanning the serving
     stack does on degraded fabrics.  Pure function of its inputs: one
-    spec, one trace."""
+    spec, one trace.  ``policy_opts`` may carry ``mode`` (see
+    ``core.timeline.MODES``); the same mode then drives both the
+    re-planning and the per-iteration event replay."""
+    mode = (policy_opts or {}).get("mode", "overlap")
     iterations: list[dict[str, Any]] = []
     n_alive_prev = -1
     schedule = None
@@ -209,6 +217,7 @@ def replay_train(
             hw=hw,
             t_f=t_f,
             multipliers=cluster.straggler_multipliers(n_alive),
+            mode=mode,
         )
         iterations.append(
             {

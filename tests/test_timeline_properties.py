@@ -1,0 +1,195 @@
+"""Property-based timeline/schedule suite for the issue-order modes.
+
+Each property runs twice: a seeded, always-on sweep (pure stdlib) and a
+``hypothesis`` ``@given`` variant through the ``tests/_hyp`` shim that
+explores the same space adversarially when the optional dependency is
+installed (and decays to a skip when it is not).
+
+Properties:
+
+  * overlapped ``evaluate`` never prices a schedule slower than the
+    serialized issue order (hiding comm can only help);
+  * ``t_iter`` is monotone in the (α, β) wire constants, both modes;
+  * ``dp_optimal_schedule`` matches brute-force enumeration of ALL
+    contiguous partitions, both modes (exact Bellman recursion);
+  * the DES replay (``sim.replay.simulate_train_iteration``) with
+    homogeneous multipliers reproduces ``core.timeline.evaluate``
+    bit-identically — same floats, same traces — both modes.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core.comm_model import AllReduceModel
+from repro.core.cost_model import LayerCost, TPU_V5E
+from repro.core.schedule import dp_optimal_schedule
+from repro.core.timeline import MODES, comm_avail_times, evaluate
+from repro.sim.replay import simulate_train_iteration
+
+SEEDS = range(25)
+
+
+def _mk_costs(rng: random.Random, L: int) -> list[LayerCost]:
+    return [
+        LayerCost(
+            name=f"l{i}",
+            params=0,
+            grad_bytes=rng.randrange(1, 1 << 22),
+            bwd_flops=rng.uniform(1e9, 5e11),
+            fwd_flops=rng.uniform(1e9, 5e11),
+        )
+        for i in range(L)
+    ]
+
+
+def _mk_groups(rng: random.Random, L: int) -> list[tuple[int, int]]:
+    cuts = sorted(rng.sample(range(1, L), k=rng.randrange(0, L))) if L > 1 else []
+    bounds = [0, *cuts, L]
+    return [(bounds[i] + 1, bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+def _all_partitions(L: int):
+    for mask in range(1 << (L - 1)):
+        bounds = [0] + [i + 1 for i in range(L - 1) if mask >> i & 1] + [L]
+        yield [(bounds[i] + 1, bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+def _mk_model(rng: random.Random) -> AllReduceModel:
+    return AllReduceModel(a=rng.uniform(0.0, 5e-3), b=rng.uniform(1e-11, 5e-9))
+
+
+# -- property bodies (shared by the seeded and hypothesis variants) ---------
+
+
+def check_overlap_le_serialized(seed: int) -> None:
+    rng = random.Random(seed)
+    L = rng.randrange(1, 12)
+    costs = _mk_costs(rng, L)
+    groups = _mk_groups(rng, L)
+    ar = _mk_model(rng)
+    over = evaluate(groups, costs, ar, TPU_V5E, mode="overlap")
+    ser = evaluate(groups, costs, ar, TPU_V5E, mode="serialized")
+    assert over.t_iter <= ser.t_iter + 1e-12, (groups, over.t_iter, ser.t_iter)
+    assert over.t_comm_exposed <= ser.t_comm_exposed + 1e-12
+    # serialized pins every group's availability to the end of backward
+    assert all(g.avail == ser.groups[0].avail for g in ser.groups)
+
+
+def check_monotone_in_alpha_beta(seed: int) -> None:
+    rng = random.Random(seed)
+    L = rng.randrange(1, 10)
+    costs = _mk_costs(rng, L)
+    groups = _mk_groups(rng, L)
+    a = sorted(rng.uniform(0.0, 5e-3) for _ in range(2))
+    b = sorted(rng.uniform(1e-11, 5e-9) for _ in range(2))
+    for mode in MODES:
+        lo = evaluate(groups, costs, AllReduceModel(a=a[0], b=b[0]), TPU_V5E, mode=mode)
+        hi = evaluate(groups, costs, AllReduceModel(a=a[1], b=b[1]), TPU_V5E, mode=mode)
+        assert lo.t_iter <= hi.t_iter + 1e-12, (mode, a, b)
+        assert lo.t_comm_total <= hi.t_comm_total + 1e-12
+
+
+def check_dp_optimal_vs_exhaustive(seed: int) -> None:
+    rng = random.Random(seed)
+    L = rng.randrange(1, 8)
+    costs = _mk_costs(rng, L)
+    ar = _mk_model(rng)
+    for mode in MODES:
+        dp = dp_optimal_schedule(costs, ar, TPU_V5E, mode=mode)
+        best = min(
+            evaluate(groups, costs, ar, TPU_V5E, mode=mode).t_iter
+            for groups in _all_partitions(L)
+        )
+        assert dp.result.t_iter <= best + 1e-12, (mode, dp.groups, dp.result.t_iter, best)
+
+
+def check_des_replay_bit_identical(seed: int) -> None:
+    rng = random.Random(seed)
+    L = rng.randrange(1, 10)
+    costs = _mk_costs(rng, L)
+    groups = _mk_groups(rng, L)
+    ar = _mk_model(rng)
+    for mode in MODES:
+        want = evaluate(groups, costs, ar, TPU_V5E, mode=mode)
+        for n_hosts in (1, 4):
+            got = simulate_train_iteration(
+                groups, costs, ar, TPU_V5E, multipliers=(1.0,) * n_hosts, mode=mode
+            )
+            # bit-identical, not approx: the DES must *be* the model
+            assert got.t_iter == want.t_iter, (mode, n_hosts)
+            assert got.t_f == want.t_f and got.t_b == want.t_b
+            assert got.t_comm_total == want.t_comm_total
+            assert got.groups == want.groups, (mode, n_hosts)
+
+
+# -- seeded always-run sweeps ----------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_overlap_le_serialized(seed):
+    check_overlap_le_serialized(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_monotone_in_alpha_beta(seed):
+    check_monotone_in_alpha_beta(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_dp_optimal_vs_exhaustive(seed):
+    check_dp_optimal_vs_exhaustive(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_des_replay_bit_identical(seed):
+    check_des_replay_bit_identical(seed)
+
+
+# -- hypothesis variants (skip when the extra is absent) --------------------
+
+
+class TestHypothesis:
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_overlap_le_serialized(self, seed):
+        check_overlap_le_serialized(seed)
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_in_alpha_beta(self, seed):
+        check_monotone_in_alpha_beta(seed)
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_dp_optimal_vs_exhaustive(self, seed):
+        check_dp_optimal_vs_exhaustive(seed)
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_des_replay_bit_identical(self, seed):
+        check_des_replay_bit_identical(seed)
+
+
+# -- mode plumbing ----------------------------------------------------------
+
+
+def test_unknown_mode_rejected():
+    costs = _mk_costs(random.Random(0), 3)
+    with pytest.raises(ValueError, match="unknown issue-order mode"):
+        comm_avail_times(costs, TPU_V5E, 1.0, mode="eager")
+    with pytest.raises(ValueError, match="unknown issue-order mode"):
+        evaluate([(1, 3)], costs, AllReduceModel(a=1e-4, b=1e-9), TPU_V5E, mode="nope")
+
+
+def test_serialized_merges_everything_under_dp():
+    """Equal availability makes one merged group dominate whenever α > 0
+    (Eq. 10: merging strictly saves α per merge)."""
+    rng = random.Random(7)
+    costs = _mk_costs(rng, 6)
+    dp = dp_optimal_schedule(costs, AllReduceModel(a=1e-3, b=1e-9), mode="serialized")
+    assert dp.groups == ((1, 6),)
